@@ -1,0 +1,67 @@
+"""§Perf hillclimb driver: re-lower one dry-run cell under a given
+REPRO_PERF flag set / remat policy and report the roofline-term deltas.
+
+Each invocation is one iteration of the hypothesis->change->measure loop;
+results append to perf_iterations.json.
+
+  REPRO_PERF=flash_vjp PYTHONPATH=src python -m benchmarks.hillclimb \
+      --arch qwen3-moe-235b-a22b --shape train_4k \
+      --label "flash custom-VJP" --remat full
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+
+os.environ.setdefault("REPRO_KERNELS", "ref")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--label", required=True)
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="perf_iterations.json")
+    args = ap.parse_args()
+
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch import roofline as rl
+    from repro.launch.dryrun import lower_cell, _mesh_name
+    from repro.train.step import TrainConfig
+
+    t0 = time.time()
+    compiled, lowered, _ = lower_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod,
+        tcfg=TrainConfig(remat=args.remat))
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    chips = 512 if args.multi_pod else 256
+    roof = rl.build(args.arch, shape, _mesh_name(args.multi_pod), chips,
+                    compiled.cost_analysis(), compiled.as_text(), cfg)
+    row = {
+        "label": args.label,
+        "flags": os.environ.get("REPRO_PERF", ""),
+        "remat": args.remat,
+        "compile_s": round(time.time() - t0, 1),
+        **roof.row(),
+    }
+    print(json.dumps({k: v for k, v in row.items()
+                      if k != "collective_detail"}, indent=1, default=str))
+    print(f"t_comp={roof.t_compute*1e3:.1f}ms t_mem={roof.t_memory*1e3:.1f}ms "
+          f"t_coll={roof.t_collective*1e3:.1f}ms -> {roof.bottleneck} "
+          f"useful={roof.useful_flop_ratio:.2f}")
+    hist = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            hist = json.load(f)
+    hist.append(row)
+    with open(args.out, "w") as f:
+        json.dump(hist, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

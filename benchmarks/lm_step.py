@@ -1,0 +1,57 @@
+"""LM substrate micro-benchmarks (CPU, reduced configs): wall time of the
+jitted train step and decode step per architecture family."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.data import tokens as data_mod
+from repro.models import decode_step, init_cache, init_params
+from repro.models.layers import ShardCtx
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+ARCHS = ("phi4-mini-3.8b", "mamba2-1.3b", "phi3.5-moe-42b-a6.6b",
+         "zamba2-2.7b", "gemma2-9b")
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(verbose=True):
+    ctx = ShardCtx()
+    rows = []
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        tcfg = TrainConfig(remat="none")
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, tcfg, ctx))
+        dcfg = data_mod.DataConfig(cfg.vocab_size, 64, 4)
+        batch = data_mod.shard_batch(data_mod.batch_at(dcfg, 0), None)
+        us_train = _time(lambda b: step(state, b)[1]["loss"], batch)
+
+        params = state["params"]
+        cache = init_cache(cfg, 4, 64)
+        db = {"tokens": jnp.ones((4, 1), jnp.int32)}
+        if cfg.use_mrope:
+            db["pos"] = jnp.zeros((4, 1, 3), jnp.int32)
+        dstep = jax.jit(lambda c, b: decode_step(cfg, params, c, b, ctx))
+        us_dec = _time(lambda: dstep(cache, db)[0])
+        rows.append({"arch": arch, "train_us": us_train, "decode_us": us_dec})
+        if verbose:
+            print(f"  {arch:24s} train={us_train:10.0f}us "
+                  f"decode={us_dec:10.0f}us", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+results JSON produced by ``python -m repro.launch.dryrun --all --out ...``."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    return f"{x*1e3:7.1f}ms"
+
+
+def render(path: str = "dryrun_results.json", mesh: str = "16x16") -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    rows = [r for r in rows if r.get("ok") and r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | t_compute | t_memory | t_collective | "
+           "bottleneck | useful FLOP ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"{r['bottleneck']} | {r['useful_flop_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def summary(path: str = "dryrun_results.json") -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    ok = [r for r in rows if r.get("ok")]
+    bad = [r for r in rows if not r.get("ok")]
+    lines = [f"{len(ok)}/{len(rows)} cells compiled"]
+    for r in bad:
+        lines.append(f"FAILED {r['arch']} x {r['shape']} x {r['mesh']}: "
+                     f"{r.get('error', '?')[:200]}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    print(summary(path))
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        print(render(path, mesh))

@@ -1,0 +1,55 @@
+"""Benchmark entry point: one function per paper table + beyond-paper
+comparisons + LM micro-benches.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--skip-lm]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    skip_lm = "--skip-lm" in sys.argv
+    rows = []
+
+    from benchmarks import paper_tables
+    kw = ({"cols": 170_897, "density": 5e-4,
+           "blocks": (2, 3, 4, 8, 10, 16, 32, 64, 128)} if full else {})
+    for table, method in paper_tables.METHODS.items():
+        print(f"# {table} ({method}Checker)", flush=True)
+        for r in paper_tables.run_table(method, **kw):
+            rows.append((f"{table}_D{r['blocks']}", r["seconds"] * 1e6,
+                         f"e_sigma={r['e_sigma']:.3e};e_u={r['e_u']:.3e};"
+                         f"lonely={r['lonely_rows']}"))
+
+    from benchmarks import rank_problem
+    print("# rank problem (paper motivation, emulated undetermined tails)",
+          flush=True)
+    for r in rank_problem.run():
+        rows.append((f"rankproblem_{r['method']}_D{r['blocks']}",
+                     r["seconds"] * 1e6,
+                     f"e_sigma={r['e_sigma']:.3e};e_u={r['e_u']:.3e};"
+                     f"unfixed={r['unfixed_lonely']}"))
+
+    from benchmarks import merge_modes
+    print("# merge modes (beyond-paper)", flush=True)
+    for r in merge_modes.run():
+        rows.append((f"merge_{r['merge']}_{r['local']}_D{r['blocks']}",
+                     r["seconds"] * 1e6,
+                     f"e_sigma={r['e_sigma']:.3e};comm={r['comm_bytes']}"))
+
+    if not skip_lm:
+        from benchmarks import lm_step
+        print("# lm steps (reduced configs)", flush=True)
+        for r in lm_step.run():
+            rows.append((f"train_{r['arch']}", r["train_us"], ""))
+            rows.append((f"decode_{r['arch']}", r["decode_us"], ""))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving example: batched generation with prefill + decode.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-1.3b]
+
+Batches uneven requests, prefills the cache in one pass, then decodes.
+Works for every family (attention KV caches, SSM constant-size states,
+hybrid both).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.models import init_params
+from repro.models.layers import ShardCtx
+from repro.serve.engine import ServeConfig, batch_requests, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b")
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ctx = ShardCtx()
+
+    requests = [
+        [5, 17, 256, 33],
+        [101, 7],
+        [42, 42, 42, 42, 42, 42],
+        [9],
+    ]
+    prompts, lens = batch_requests(requests)
+    print(f"arch={cfg.name}: {len(requests)} requests, "
+          f"lens={lens.tolist()} -> padded batch {prompts.shape}")
+
+    scfg = ServeConfig(max_seq=prompts.shape[1] + args.tokens,
+                       temperature=args.temperature)
+    t0 = time.perf_counter()
+    out = generate(cfg, params, jnp.asarray(prompts), ctx, scfg, args.tokens)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    total = len(requests) * args.tokens
+    print(f"generated {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s incl. compile)")
+    for i, row in enumerate(jax.device_get(out)):
+        print(f"  req{i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+on synthetic data, with checkpoints and resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch ARCH]
+    [--galore]
+
+The config is a scaled phi4-mini (d_model 512, 8 layers, ~100M params
+mostly in the embedding + trunk).  Loss on the synthetic Markov stream
+drops from ~ln(64)+noise toward the stream's entropy — visible well
+within a few hundred steps.
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.compression.galore import GaloreConfig
+from repro.data import tokens as data_mod
+from repro.models.layers import ShardCtx
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, train
+from repro.train.step import TrainConfig
+
+
+def lm_100m(arch: str):
+    base = get_smoke_config(arch)
+    return dataclasses.replace(
+        base,
+        name=f"{arch}-100m",
+        num_layers=8,
+        d_model=512,
+        num_heads=8 if base.num_heads else 0,
+        num_kv_heads=4 if base.num_kv_heads else 0,
+        head_dim=64,
+        d_ff=2048 if base.d_ff else 0,
+        vocab_size=32_000,
+        num_experts=base.num_experts and 8,
+        experts_per_token=base.experts_per_token and 2,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--galore", action="store_true",
+                    help="Ranky-GaLore low-rank gradient compression")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = lm_100m(args.arch)
+    from repro.models.schema import init_params, param_count_actual
+    n = param_count_actual(init_params(cfg, jax.random.PRNGKey(0)))
+    print(f"arch={cfg.name} params={n/1e6:.1f}M")
+
+    tcfg = TrainConfig(
+        optimizer="galore" if args.galore else "adamw",
+        remat="none",
+        adamw=AdamWConfig(lr=1e-3),
+        galore=GaloreConfig(rank=32, update_every=25),
+        warmup_steps=20,
+        total_steps=args.steps,
+    )
+    dcfg = data_mod.DataConfig(cfg.vocab_size, args.seq, args.batch,
+                               alphabet=64, noise=0.15)
+    lcfg = LoopConfig(steps=args.steps, ckpt_every=100,
+                      ckpt_dir=args.ckpt_dir, log_every=10)
+    ctx = ShardCtx()  # single host; pass a mesh for multi-device
+    train(cfg, tcfg, lcfg, ctx, dcfg)
+
+
+if __name__ == "__main__":
+    main()

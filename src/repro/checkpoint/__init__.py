@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import Checkpointer, tree_signature  # noqa: F401

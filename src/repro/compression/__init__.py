@@ -1,0 +1,2 @@
+from repro.compression import galore  # noqa: F401
+from repro.compression.galore import GaloreConfig  # noqa: F401

@@ -1,0 +1,168 @@
+"""Ranky-GaLore: SVD-based low-rank gradient compression.
+
+Every ``update_every`` steps, the left singular basis P (m x r) of each
+eligible 2-D gradient is recomputed with the paper's machinery: the
+gradient is already column-sharded by TP — exactly Ranky's block
+decomposition — so the basis comes from the *gram-allreduce* merge
+(eigh of sum of per-shard grams, core/svd.merge_grams_eigh), which is the
+beyond-paper optimized merge mode.  Adam moments then live in the rank-r
+projected space (r x n instead of m x n): the optimizer-state memory and
+the cross-data-rank gradient traffic both shrink by m/r.
+
+Rank repair's role here: MoE expert slabs and padded attention heads
+produce gradients with structurally-zero rows; their gram null space
+makes eigh bases unstable across refreshes (the same rank problem the
+paper fixes for sparse matrices).  We apply RandomChecker-style repair to
+a *copy* of the gradient used for basis computation only — the true
+gradient is never modified — which pins the null-space directions and
+stabilizes the projector.  This mirrors the paper's usage: repair as a
+preprocessing step for the factorization, evaluated in
+tests/test_galore.py.
+
+State layout per eligible leaf: {"p": (.., m, r), "m"/"v": (.., r, n)}.
+Leaves with extra leading dims (stacked layers, experts) are vmapped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, clip_by_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class GaloreConfig:
+    rank: int = 32
+    update_every: int = 50
+    min_dim: int = 64       # both matrix dims must reach this
+    repair: bool = True     # Ranky rank repair for the basis gram
+    scale: float = 1.0      # GaLore alpha
+
+
+def _mat_shape(leaf) -> Optional[Tuple[int, int]]:
+    """Eligible leaves are (.., m, n) with both dims >= min_dim; the
+    trailing two dims are the matrix."""
+    if leaf.ndim < 2:
+        return None
+    return leaf.shape[-2], leaf.shape[-1]
+
+
+def eligible(gcfg: GaloreConfig, leaf) -> bool:
+    ms = _mat_shape(leaf)
+    if ms is None:
+        return False
+    m, n = ms
+    return min(m, n) >= gcfg.min_dim and gcfg.rank < min(m, n)
+
+
+def _basis(gcfg: GaloreConfig, g: jnp.ndarray, key: jnp.ndarray) -> jnp.ndarray:
+    """Top-r left singular basis of g (m x n) via gram + eigh, with
+    optional Ranky-style repair of zero rows (basis copy only)."""
+    g32 = g.astype(jnp.float32)
+    if gcfg.repair:
+        lonely = ~jnp.any(g32 != 0, axis=-1)             # (m,)
+        m, n = g32.shape
+        cols = jax.random.randint(key, (m,), 0, n)
+        eps = 1e-6
+        fill = jax.nn.one_hot(cols, n, dtype=jnp.float32) * eps
+        g32 = g32 + lonely[:, None] * fill
+    gram = g32 @ g32.T                                    # (m, m)
+    _, vecs = jnp.linalg.eigh(gram)                       # ascending
+    return vecs[:, ::-1][:, : gcfg.rank]                  # (m, r)
+
+
+def _vmapped(fn, extra_dims: int):
+    for _ in range(extra_dims):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def init_state(params, gcfg: GaloreConfig) -> Dict[str, Any]:
+    def leaf_state(p):
+        if eligible(gcfg, p):
+            lead = p.shape[:-2]
+            m, n = p.shape[-2:]
+            return {
+                "p": jnp.zeros(lead + (m, gcfg.rank), jnp.float32),
+                "m": jnp.zeros(lead + (gcfg.rank, n), jnp.float32),
+                "v": jnp.zeros(lead + (gcfg.rank, n), jnp.float32),
+            }
+        return {
+            "m": jnp.zeros(p.shape, jnp.float32),
+            "v": jnp.zeros(p.shape, jnp.float32),
+        }
+
+    return {
+        "leaves": jax.tree.map(leaf_state, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_updates(
+    acfg: AdamWConfig,
+    gcfg: GaloreConfig,
+    params,
+    grads,
+    state: Dict[str, Any],
+    *,
+    lr_scale=1.0,
+    key: Optional[jnp.ndarray] = None,
+):
+    """One GaLore-AdamW step."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    grads, gn = clip_by_global_norm(grads, acfg.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - acfg.b1 ** t
+    bc2 = 1.0 - acfg.b2 ** t
+    refresh = (state["step"] % gcfg.update_every) == 0
+
+    def upd(p, g, st, k):
+        g = g.astype(jnp.float32)
+        if not eligible(gcfg, p):
+            m2 = acfg.b1 * st["m"] + (1 - acfg.b1) * g
+            v2 = acfg.b2 * st["v"] + (1 - acfg.b2) * g * g
+            delta = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + acfg.eps)
+            if p.ndim >= 2:
+                delta = delta + acfg.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - acfg.lr * lr_scale * delta)
+            return newp.astype(p.dtype), {"m": m2, "v": v2}
+
+        lead = p.ndim - 2
+
+        def new_basis(gm):
+            return _basis(gcfg, gm, k)
+
+        proj = jax.lax.cond(
+            refresh,
+            lambda: _vmapped(new_basis, lead)(g),
+            lambda: st["p"],
+        )
+        # project: g_low = P^T g  (.., r, n)
+        g_low = jnp.einsum("...mr,...mn->...rn", proj, g)
+        m2 = acfg.b1 * st["m"] + (1 - acfg.b1) * g_low
+        v2 = acfg.b2 * st["v"] + (1 - acfg.b2) * g_low * g_low
+        d_low = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + acfg.eps)
+        delta = gcfg.scale * jnp.einsum("...mr,...rn->...mn", proj, d_low)
+        delta = delta + acfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - acfg.lr * lr_scale * delta
+        return newp.astype(p.dtype), {"p": proj, "m": m2, "v": v2}
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = treedef.flatten_up_to(state["leaves"])
+    keys = jax.random.split(key, len(flat_p))
+    outs = [upd(p, g, s, kk)
+            for p, g, s, kk in zip(flat_p, flat_g, flat_s, keys)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_leaves = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_params, {"leaves": new_leaves, "step": step}, {"grad_norm": gn}
+
+
+def state_bytes(state) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree.leaves(state["leaves"]))

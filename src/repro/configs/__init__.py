@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    InputShape,
+    ModelConfig,
+    cells,
+    get_config,
+    get_smoke_config,
+)

@@ -1,0 +1,14 @@
+"""Ranky core: distributed SVD on large sparse matrices (the paper's
+contribution), in JAX."""
+from repro.core.ranky import (  # noqa: F401
+    METHODS,
+    lonely_rows,
+    random_checker,
+    neighbor_checker,
+    neighbor_random_checker,
+    repair_block,
+    ranky_svd,
+    row_adjacency,
+)
+from repro.core.distributed import distributed_ranky_svd  # noqa: F401
+from repro.core import sparse, spectral, svd  # noqa: F401

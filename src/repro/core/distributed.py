@@ -1,0 +1,179 @@
+"""Distributed Ranky SVD with shard_map.
+
+The input matrix is column-sharded over one or more mesh axes — each
+device owns exactly one column block A^i, which *is* the paper's block
+decomposition mapped onto the mesh.  Everything (rank repair, local
+factorization, merge) happens inside a single shard_map region so XLA can
+schedule the collectives.
+
+Merge modes
+  * ``proxy`` (paper-faithful): all-gather the M x M proxy panels
+    ``U^i Sigma^i`` and SVD the proxy on every device.
+    Communication: O(M^2 * D) all-gather + O((DM)^2 M) redundant SVD.
+  * ``gram`` (beyond-paper): PP^T == sum_i G_i, so a single psum of the
+    M x M local grams + one eigh replaces gather + proxy SVD.
+    Communication: O(M^2) all-reduce.  This is the optimization we report
+    against the paper baseline in benchmarks/merge_modes.py.
+
+Hierarchical merge (``hierarchical=True`` with two axes, e.g.
+("pod", "model")): merge within the fast inner axis first (intra-pod ICI),
+then across the slow outer axis (inter-pod DCI) — a 2-level tree like the
+paper's future-work hierarchy, scheduled to match the network hierarchy.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import svd as lsvd
+from repro.core import ranky
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def _axis_size(axes: Sequence[str]) -> jnp.ndarray:
+    sz = 1
+    for ax in axes:
+        sz = sz * jax.lax.axis_size(ax)
+    return sz
+
+
+def _flat_index(axes: Sequence[str]) -> jnp.ndarray:
+    """Row-major flat device index across the given mesh axes."""
+    idx = jnp.zeros((), jnp.int32)
+    for ax in axes:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def _local_repair(
+    blk: jnp.ndarray, method: str, key: jax.Array, axes: Sequence[str]
+) -> jnp.ndarray:
+    """Rank-repair the local block; neighbor methods need the *global*
+    row adjacency = psum of binarized local grams over the block axes."""
+    key = jax.random.fold_in(key, _flat_index(axes))
+    if method in ("neighbor", "neighbor_random"):
+        b = (blk != 0).astype(jnp.float32)
+        adj_local = b @ b.T
+        adj = jax.lax.psum(adj_local, axes)
+        # Clear self-adjacency (paper: a node is not its own neighbor).
+        adj = (adj > 0) & ~jnp.eye(adj.shape[0], dtype=bool)
+        return ranky.repair_block(blk, method, key, adj)
+    return ranky.repair_block(blk, method, key, None)
+
+
+def _local_factorize(blk: jnp.ndarray, local_mode: str, use_kernel: bool):
+    if local_mode == "gram":
+        return lsvd.local_svd_gram(blk, use_kernel=use_kernel)
+    if local_mode == "svd":
+        return lsvd.local_svd_exact(blk)
+    raise ValueError(f"unknown local_mode {local_mode!r}")
+
+
+def _merge_proxy_over(panel: jnp.ndarray, axes: Sequence[str]):
+    """All-gather panels over ``axes`` and SVD the proxy (replicated)."""
+    panels = panel
+    for ax in reversed(axes):
+        panels = jax.lax.all_gather(panels, ax, tiled=False)
+        panels = panels.reshape((-1,) + panel.shape)
+    if panels.ndim == 2:
+        panels = panels[None]
+    return lsvd.merge_panels_svd(panels)
+
+
+def _svd_shard_fn(
+    a_blk: jnp.ndarray,
+    key: jax.Array,
+    *,
+    axes: Tuple[str, ...],
+    method: str,
+    local_mode: str,
+    merge_mode: str,
+    hierarchical: bool,
+    use_kernel: bool,
+    want_right: bool,
+):
+    blk = _local_repair(a_blk, method, key, axes)
+
+    if merge_mode == "gram":
+        # Beyond-paper: one M x M all-reduce; eigh redundantly everywhere.
+        # psum over all block axes is already hierarchy-optimal (XLA lowers
+        # multi-axis psum as in-node reduce then cross-node).
+        g = jax.lax.psum(lsvd.gram(blk, use_kernel=use_kernel), axes)
+        u, s = lsvd.eigh_to_svd(g)
+    elif merge_mode == "proxy":
+        u_i, s_i = _local_factorize(blk, local_mode, use_kernel)
+        panel = lsvd.proxy_panel(u_i, s_i)
+        if hierarchical and len(axes) > 1:
+            # Level 1: merge within the innermost (fast, intra-pod) axis.
+            u1, s1 = _merge_proxy_over(panel, axes[-1:])
+            # Level 2: merge the per-pod panels across the outer axes.
+            u, s = _merge_proxy_over(lsvd.proxy_panel(u1, s1), axes[:-1])
+        else:
+            u, s = _merge_proxy_over(panel, axes)
+    else:
+        raise ValueError(f"unknown merge_mode {merge_mode!r}")
+
+    if not want_right:
+        return u, s
+    v_blk = lsvd.right_vectors(blk, u, s)
+    return u, s, v_blk
+
+
+def distributed_ranky_svd(
+    a: jax.Array,
+    mesh: Mesh,
+    *,
+    block_axes: Sequence[str] = ("model",),
+    method: str = "neighbor_random",
+    local_mode: str = "gram",
+    merge_mode: str = "gram",
+    hierarchical: bool = False,
+    use_kernel: bool = False,
+    want_right: bool = False,
+    key: Optional[jax.Array] = None,
+):
+    """Distributed Ranky SVD of a column-sharded short-and-fat matrix.
+
+    Args:
+      a: (M, N) array; will be placed with columns sharded over
+        ``block_axes`` (N must divide by the product of those axis sizes).
+      mesh: the device mesh.
+      block_axes: mesh axes the columns (= paper blocks) shard over.
+        ``("pod", "model")`` + ``hierarchical=True`` gives the two-level
+        tree merge.
+      method: one of ranky.METHODS.
+      merge_mode: "proxy" (paper) or "gram" (beyond-paper all-reduce).
+      want_right: also return this device's shard of V (N/D, M),
+        column-sharded like the input.
+
+    Returns (U, S) replicated — or (U, S, V) with V column-sharded.
+    """
+    axes = tuple(block_axes)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    in_spec = (P(None, axes), P())
+    out_spec = (P(), P()) if not want_right else (P(), P(), P(axes, None))
+
+    fn = partial(
+        _svd_shard_fn,
+        axes=axes,
+        method=method,
+        local_mode=local_mode,
+        merge_mode=merge_mode,
+        hierarchical=hierarchical,
+        use_kernel=use_kernel,
+        want_right=want_right,
+    )
+    sharded = shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+                        check_vma=False)
+    a = jax.device_put(a, NamedSharding(mesh, P(None, axes)))
+    return jax.jit(sharded)(a, key)

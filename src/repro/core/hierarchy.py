@@ -1,0 +1,98 @@
+"""Hierarchical / incremental Ranky SVD (paper §V future work, and the
+Iwen & Ong incremental algorithm the paper builds on).
+
+Motivation: with thousands of blocks (D >> number of devices) the proxy
+matrix M x (D*M) becomes the bottleneck.  The fix is a *tree merge*:
+merge panels in groups of ``fanout`` per level — each merge produces a
+single M x r panel — until one panel remains.  With truncation rank
+r < M this is exactly Iwen & Ong's memory-bounded incremental algorithm,
+and it exposes the paper's *rank problem*: if a block's rank falls below
+r (lonely rows!), the truncated merge loses components it can never
+recover.  Ranky's checkers run before level 0 to prevent that.
+
+This module is the host-orchestrated variant (Python loop over levels,
+jitted per-level vmapped merges); the two-level device-scheduled variant
+lives in core/distributed.py (hierarchical=True).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ranky
+from repro.core import svd as lsvd
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def _merge_group(panels: jnp.ndarray, rank: int) -> jnp.ndarray:
+    """SVD-merge a (G, M, r) group of panels into one (M, rank) panel."""
+    g, m, r = panels.shape
+    p = jnp.transpose(panels, (1, 0, 2)).reshape(m, g * r)
+    u, s, _ = jnp.linalg.svd(p, full_matrices=False)
+    k = min(m, g * r)
+    if k < rank:
+        u = jnp.pad(u, ((0, 0), (0, rank - k)))
+        s = jnp.pad(s, (0, rank - k))
+    return u[:, :rank] * s[None, :rank]
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def _leaf_panel(blk: jnp.ndarray, rank: int) -> jnp.ndarray:
+    u, s = lsvd.local_svd_gram(blk)
+    return lsvd.proxy_panel(u, s)[:, :rank]
+
+
+def hierarchical_ranky_svd(
+    a_dense: jnp.ndarray,
+    *,
+    num_blocks: int,
+    fanout: int = 4,
+    rank: Optional[int] = None,
+    method: str = "neighbor_random",
+    key: Optional[jax.Array] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Tree-merged Ranky SVD.  Returns (U, S) with S of length ``rank``
+    (defaults to M — exact; r < M gives the truncated incremental
+    algorithm whose failure on rank-deficient blocks motivates Ranky).
+    """
+    m, n = a_dense.shape
+    if n % num_blocks:
+        raise ValueError("pad columns so N % num_blocks == 0")
+    r = m if rank is None else min(rank, m)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    blocks = jnp.transpose(
+        a_dense.reshape(m, num_blocks, n // num_blocks), (1, 0, 2)
+    )
+
+    adj = (
+        ranky.row_adjacency(a_dense)
+        if method in ("neighbor", "neighbor_random")
+        else None
+    )
+    keys = jax.random.split(key, num_blocks)
+    blocks = jax.vmap(lambda b, k: ranky.repair_block(b, method, k, adj))(
+        blocks, keys
+    )
+
+    # Level 0: per-block factorization -> (D, M, r) panels.
+    panels = jax.vmap(lambda b: _leaf_panel(b, r))(blocks)
+
+    # Tree merge, groups of ``fanout`` per level.
+    while panels.shape[0] > 1:
+        d = panels.shape[0]
+        pad = (-d) % fanout
+        if pad:
+            panels = jnp.concatenate(
+                [panels, jnp.zeros((pad,) + panels.shape[1:], panels.dtype)]
+            )
+        groups = panels.reshape(-1, fanout, m, r)
+        panels = jax.vmap(lambda g: _merge_group(g, r))(groups)
+
+    panel = panels[0]  # (M, r) == U * S of A (up to unitary, exactly if r = rank(A))
+    u, s, _ = jnp.linalg.svd(panel, full_matrices=False)
+    return u, s

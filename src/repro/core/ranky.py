@@ -1,0 +1,259 @@
+"""Ranky rank-repair methods (the paper's core contribution) + the
+single-host reference pipeline.
+
+The paper's per-row pseudocode loops are re-expressed as vectorized mask
+algebra so they run as a handful of XLA ops per block instead of Python
+loops (TPU adaptation; semantics preserved — see the literal numpy
+reference implementations ``ref_*`` used by the property tests).
+
+Terminology (paper): a *lonely node/row* is a row that is all-zero inside
+one column block (it may have entries in other blocks).  Lonely rows make
+``rank(A^i) < rank(A)`` which breaks the proxy-matrix SVD recovery.
+
+Methods:
+  * random   — RandomChecker: each lonely row gets a 1 at a uniformly
+               random column inside the block.
+  * neighbor — NeighborChecker: a lonely row m gets a 1 at a column of
+               this block where one of m's graph neighbors (rows sharing
+               a nonzero column with m *anywhere* in A) has a nonzero.
+               If m has no neighbor with entries in this block, the row
+               stays lonely (this is the paper's observed weakness).
+  * neighbor_random — NeighborRandomChecker: neighbor first, random
+               fallback for rows the neighbor pass could not fix.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+METHODS = ("none", "random", "neighbor", "neighbor_random")
+
+
+# ---------------------------------------------------------------------------
+# Mask helpers
+# ---------------------------------------------------------------------------
+
+def lonely_rows(a_blk: jnp.ndarray) -> jnp.ndarray:
+    """Boolean (M,) mask of rows that are all-zero inside this block."""
+    return ~jnp.any(a_blk != 0, axis=1)
+
+
+def row_adjacency(a_dense: jnp.ndarray) -> jnp.ndarray:
+    """Global boolean row-adjacency R[m, m'] = rows m and m' share a
+    nonzero column somewhere in A.  Diagonal is cleared.
+
+    Distributed equivalent: psum of binarized local grams (see
+    core/distributed.py) — this routine is the single-host reference.
+    """
+    b = (a_dense != 0).astype(jnp.float32)
+    adj = (b @ b.T) > 0
+    return adj & ~jnp.eye(adj.shape[0], dtype=bool)
+
+
+def _random_cols(key: jax.Array, m: int, n: int) -> jnp.ndarray:
+    return jax.random.randint(key, (m,), 0, n)
+
+
+def _choose_masked_col(key: jax.Array, mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per row, uniformly choose a column among ``mask`` (M, N) candidates.
+
+    Returns (cols (M,), has_candidate (M,)).  Rows without candidates get
+    an arbitrary column index (callers must gate on has_candidate).
+    """
+    scores = jax.random.uniform(key, mask.shape)
+    scores = jnp.where(mask, scores, -1.0)
+    return jnp.argmax(scores, axis=1), jnp.any(mask, axis=1)
+
+
+def _fill_rows(a_blk: jnp.ndarray, rows_mask: jnp.ndarray, cols: jnp.ndarray) -> jnp.ndarray:
+    """Set A[m, cols[m]] = 1 for every row m with rows_mask[m]."""
+    onehot = jax.nn.one_hot(cols, a_blk.shape[1], dtype=a_blk.dtype)
+    fill = rows_mask[:, None].astype(a_blk.dtype) * onehot
+    # Rows being filled are all-zero inside the block, so add == set.
+    return a_blk + fill
+
+
+# ---------------------------------------------------------------------------
+# Vectorized checkers (jit-able; the production path)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def random_checker(a_blk: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """RandomChecker: lonely rows get a 1 at a random in-block column."""
+    lonely = lonely_rows(a_blk)
+    cols = _random_cols(key, a_blk.shape[0], a_blk.shape[1])
+    return _fill_rows(a_blk, lonely, cols)
+
+
+@jax.jit
+def neighbor_checker(
+    a_blk: jnp.ndarray, row_adj: jnp.ndarray, key: jax.Array
+) -> jnp.ndarray:
+    """NeighborChecker: lonely rows get a 1 at a random column where one
+    of their graph neighbors has an entry inside this block."""
+    lonely = lonely_rows(a_blk)
+    present = (a_blk != 0).astype(jnp.float32)
+    # candidate_cols[m, n] = some neighbor of m has a nonzero at column n.
+    candidate_cols = (row_adj.astype(jnp.float32) @ present) > 0
+    cols, has_cand = _choose_masked_col(key, candidate_cols)
+    return _fill_rows(a_blk, lonely & has_cand, cols)
+
+
+@jax.jit
+def neighbor_random_checker(
+    a_blk: jnp.ndarray, row_adj: jnp.ndarray, key: jax.Array
+) -> jnp.ndarray:
+    """NeighborRandomChecker: neighbor pass, then random fallback for rows
+    still lonely (no neighbor had entries inside this block)."""
+    k_nb, k_rand = jax.random.split(key)
+    lonely = lonely_rows(a_blk)
+    present = (a_blk != 0).astype(jnp.float32)
+    candidate_cols = (row_adj.astype(jnp.float32) @ present) > 0
+    nb_cols, has_cand = _choose_masked_col(k_nb, candidate_cols)
+    rand_cols = _random_cols(k_rand, a_blk.shape[0], a_blk.shape[1])
+    cols = jnp.where(has_cand, nb_cols, rand_cols)
+    return _fill_rows(a_blk, lonely, cols)
+
+
+def repair_block(
+    a_blk: jnp.ndarray,
+    method: str,
+    key: jax.Array,
+    row_adj: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Dispatch one of the Ranky methods on a block."""
+    if method == "none":
+        return a_blk
+    if method == "random":
+        return random_checker(a_blk, key)
+    if row_adj is None:
+        raise ValueError(f"method {method!r} needs the row adjacency")
+    if method == "neighbor":
+        return neighbor_checker(a_blk, row_adj, key)
+    if method == "neighbor_random":
+        return neighbor_random_checker(a_blk, row_adj, key)
+    raise ValueError(f"unknown Ranky method {method!r}; want one of {METHODS}")
+
+
+# ---------------------------------------------------------------------------
+# Literal per-row numpy references (paper pseudocode transliterated).
+# Used only by property tests to pin the vectorized semantics.
+# ---------------------------------------------------------------------------
+
+def ref_lonely_rows(a_blk: np.ndarray) -> np.ndarray:
+    out = np.ones(a_blk.shape[0], dtype=bool)
+    for m in range(a_blk.shape[0]):
+        for n in range(a_blk.shape[1]):
+            if a_blk[m, n] != 0:
+                out[m] = False
+                break
+    return out
+
+
+def ref_random_checker(a_blk: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    a = a_blk.copy()
+    for m in range(a.shape[0]):
+        if not a[m].any():
+            a[m, rng.integers(0, a.shape[1])] = 1.0
+    return a
+
+
+def ref_neighbor_candidates(
+    a_full: np.ndarray, blk_lo: int, blk_hi: int, m: int
+) -> np.ndarray:
+    """Paper NeighborChecker inner loops: the set of columns inside block
+    [blk_lo, blk_hi) where any graph-neighbor of row m has a nonzero."""
+    mcount = a_full.shape[0]
+    neighbors = set()
+    for n1 in range(a_full.shape[1]):
+        if blk_lo <= n1 < blk_hi:
+            continue  # other blocks only (d1 == d is skipped in the paper)
+        if a_full[m, n1] != 0:
+            for m1 in range(mcount):
+                if m1 != m and a_full[m1, n1] != 0:
+                    neighbors.add(m1)
+    cols = set()
+    for m1 in neighbors:
+        for n2 in range(blk_lo, blk_hi):
+            if a_full[m1, n2] != 0:
+                cols.add(n2 - blk_lo)
+    return np.asarray(sorted(cols), dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Single-host end-to-end pipeline (reference for the distributed version)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_blocks", "method", "local_mode",
+                                   "merge_mode", "undetermined_tail"))
+def ranky_svd(
+    a_dense: jnp.ndarray,
+    *,
+    num_blocks: int,
+    method: str = "neighbor_random",
+    local_mode: str = "gram",  # "gram" (TPU-native) | "svd" (paper dgesvd)
+    merge_mode: str = "proxy",  # "proxy" (paper) | "gram" (beyond-paper)
+    undetermined_tail: bool = False,
+    key: Optional[jax.Array] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-level Ranky distributed SVD, single host: returns (U, S) of A.
+
+    N must be divisible by num_blocks (pad with zero columns first — this
+    is lossless for U and S; see sparse.pad_to_block_multiple).
+
+    ``undetermined_tail`` emulates the rank problem the paper fixes: a
+    rank-deficient block's SVD has zero singular values whose left-vector
+    columns are numerically UNDETERMINED (the reference C implementation
+    communicates d panel columns regardless of the block's actual rank,
+    so the dead columns carry whatever noise the factorization left
+    there).  With the flag on, dead panel columns are filled with
+    sqrt(eps)-scale noise — the exact failure Ranky's checkers prevent by
+    making every block full-rank.  See benchmarks/rank_problem.py.
+    """
+    from repro.core import svd as lsvd
+
+    m, n = a_dense.shape
+    if n % num_blocks:
+        raise ValueError("pad columns so N % num_blocks == 0")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    blocks = jnp.transpose(
+        a_dense.reshape(m, num_blocks, n // num_blocks), (1, 0, 2)
+    )  # (D, M, N/D)
+
+    adj = row_adjacency(a_dense) if method in ("neighbor", "neighbor_random") else None
+    keys = jax.random.split(key, num_blocks)
+
+    def fix(blk, k):
+        return repair_block(blk, method, k, adj)
+
+    blocks = jax.vmap(fix)(blocks, keys)
+
+    if merge_mode == "gram":
+        grams = jax.vmap(lambda b: lsvd.gram(b))(blocks)
+        return lsvd.merge_grams_eigh(grams)
+
+    if local_mode == "gram":
+        us = jax.vmap(lambda b: lsvd.local_svd_gram(b))(blocks)
+    elif local_mode == "svd":
+        us = jax.vmap(lsvd.local_svd_exact)(blocks)
+    else:
+        raise ValueError(f"unknown local_mode {local_mode!r}")
+    panels = jax.vmap(lsvd.proxy_panel)(*us)  # (D, M, M)
+    if undetermined_tail:
+        u_all, s_all = us
+        smax = jnp.max(s_all, axis=1, keepdims=True)          # (D, 1)
+        dead = s_all <= 1e-9 * smax                           # (D, M)
+        nkeys = jax.random.split(jax.random.fold_in(key, 0xDEAD), num_blocks)
+        noise = jax.vmap(
+            lambda k, p: jax.random.normal(k, p.shape, p.dtype))(
+                nkeys, panels)
+        eps_scale = jnp.sqrt(jnp.finfo(a_dense.dtype).eps)
+        panels = jnp.where(dead[:, None, :],
+                           noise * smax[:, :, None] * eps_scale, panels)
+    return lsvd.merge_panels_svd(panels)

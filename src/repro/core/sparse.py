@@ -1,0 +1,135 @@
+"""Sparse-matrix utilities for Ranky.
+
+JAX/XLA has no production sparse tensor type, so we represent sparse
+matrices densely with *structural* sparsity: the algorithmic parts of the
+paper (lonely-row detection, neighbor discovery) operate on boolean masks.
+This module provides generators for paper-style bipartite matrices and a
+small COO container used by the data pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class COOMatrix:
+    """Minimal COO container (host-side; densified before device work)."""
+
+    rows: np.ndarray  # (nnz,) int32
+    cols: np.ndarray  # (nnz,) int32
+    vals: np.ndarray  # (nnz,) float32
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.shape[0])
+
+    def todense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=np.float32)
+        out[self.rows, self.cols] = self.vals
+        return out
+
+    def density(self) -> float:
+        return self.nnz / (self.shape[0] * self.shape[1])
+
+
+def random_bipartite(
+    m: int,
+    n: int,
+    density: float,
+    *,
+    seed: int = 0,
+    weighted: bool = False,
+    power_law: bool = True,
+) -> COOMatrix:
+    """Generate a sparse bipartite adjacency matrix like the paper's dataset.
+
+    The paper's matrix is a 539 x 170897 job-candidate bipartite graph.
+    Real bipartite interaction graphs have heavy-tailed column degrees
+    (most candidates apply to few jobs); ``power_law=True`` reproduces
+    this, which is what creates *lonely rows* once the matrix is split
+    column-wise into blocks.
+    """
+    rng = np.random.default_rng(seed)
+    nnz_target = max(1, int(round(m * n * density)))
+
+    if power_law:
+        # Heavy-tailed row popularity: some jobs get most applications.
+        row_p = rng.pareto(1.5, size=m) + 1.0
+        row_p /= row_p.sum()
+    else:
+        row_p = np.full(m, 1.0 / m)
+
+    rows = rng.choice(m, size=nnz_target, p=row_p).astype(np.int32)
+    cols = rng.integers(0, n, size=nnz_target).astype(np.int32)
+
+    # Dedup (i, j) pairs.
+    key = rows.astype(np.int64) * n + cols
+    _, idx = np.unique(key, return_index=True)
+    rows, cols = rows[idx], cols[idx]
+
+    if weighted:
+        vals = rng.uniform(0.5, 2.0, size=rows.shape[0]).astype(np.float32)
+    else:
+        vals = np.ones(rows.shape[0], dtype=np.float32)
+    return COOMatrix(rows=rows, cols=cols, vals=vals, shape=(m, n))
+
+
+def ensure_full_row_rank(coo: COOMatrix, *, seed: int = 0) -> COOMatrix:
+    """Make sure the *global* matrix has full row rank M (paper assumes
+    rank(A) = M for the short-and-fat case) by giving every empty global
+    row at least two entries."""
+    rng = np.random.default_rng(seed + 1)
+    m, n = coo.shape
+    have = np.zeros(m, dtype=bool)
+    have[coo.rows] = True
+    missing = np.nonzero(~have)[0]
+    if missing.size == 0:
+        return coo
+    extra_rows, extra_cols, extra_vals = [], [], []
+    for r in missing:
+        cs = rng.choice(n, size=2, replace=False)
+        extra_rows += [r, r]
+        extra_cols += list(cs)
+        extra_vals += [1.0, 1.0]
+    return COOMatrix(
+        rows=np.concatenate([coo.rows, np.asarray(extra_rows, np.int32)]),
+        cols=np.concatenate([coo.cols, np.asarray(extra_cols, np.int32)]),
+        vals=np.concatenate([coo.vals, np.asarray(extra_vals, np.float32)]),
+        shape=coo.shape,
+    )
+
+
+def block_col_bounds(n: int, num_blocks: int, block_idx: int) -> Tuple[int, int]:
+    """Column range [lo, hi) of block ``block_idx`` out of ``num_blocks``.
+
+    Matches the paper's ``(N/D)*d .. (N/D)*(d+1)`` split, with the
+    remainder folded into the final block.
+    """
+    base = n // num_blocks
+    lo = base * block_idx
+    hi = base * (block_idx + 1) if block_idx < num_blocks - 1 else n
+    return lo, hi
+
+
+def split_blocks(dense: np.ndarray, num_blocks: int) -> list:
+    """Column-wise block decomposition A = [A^1 | ... | A^D]."""
+    n = dense.shape[1]
+    return [
+        dense[:, slice(*block_col_bounds(n, num_blocks, d))]
+        for d in range(num_blocks)
+    ]
+
+
+def pad_to_block_multiple(dense: np.ndarray, num_blocks: int) -> np.ndarray:
+    """Zero-pad columns so N divides evenly by num_blocks (needed for the
+    shard_map path where all shards must be equal-sized). Zero columns do
+    not change AA^T, singular values, or left vectors."""
+    m, n = dense.shape
+    rem = (-n) % num_blocks
+    if rem == 0:
+        return dense
+    return np.concatenate([dense, np.zeros((m, rem), dtype=dense.dtype)], axis=1)

@@ -1,0 +1,109 @@
+"""Local (per-block) SVD primitives.
+
+Two interchangeable local factorizations of a short-and-fat block
+``A_blk (M x N_b)``, both returning ``(U, S)`` with U: (M, M), S: (M,)
+sorted descending:
+
+* ``local_svd_gram``  — TPU-native: ``G = A A^T`` (M x M) via one big MXU
+  matmul (optionally the Pallas blockgram kernel), then ``eigh(G)``.
+  Cost: O(M^2 N) matmul + O(M^3) eigh.  This is the fast path; it squares
+  the condition number, losing singular values below ~sqrt(eps)*smax.
+* ``local_svd_exact`` — ``jnp.linalg.svd`` on the block (LAPACK-style,
+  the paper's dgesvd analogue).  More accurate, slower on TPU.
+
+The merge step needs only ``U @ diag(S)`` per block (the proxy panel).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gram(a_blk: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
+    """G = A_blk @ A_blk^T, optionally via the Pallas blockgram kernel."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.blockgram(a_blk)
+    return a_blk @ a_blk.T
+
+
+def eigh_to_svd(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Convert eigh(G) of a PSD gram matrix into (U, S) sorted descending."""
+    evals, evecs = jnp.linalg.eigh(g)  # ascending
+    evals = jnp.flip(evals, axis=-1)
+    evecs = jnp.flip(evecs, axis=-1)
+    s = jnp.sqrt(jnp.clip(evals, 0.0, None))
+    return evecs, s
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def local_svd_gram(
+    a_blk: jnp.ndarray, *, use_kernel: bool = False
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(U, S) of a block via gram + eigh (TPU-native path)."""
+    return eigh_to_svd(gram(a_blk, use_kernel=use_kernel))
+
+
+@jax.jit
+def local_svd_exact(a_blk: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(U, S) of a block via full SVD (paper's dgesvd analogue).
+
+    Pads S with zeros up to M when N_b < M so panel shapes are static.
+    """
+    m = a_blk.shape[0]
+    u, s, _ = jnp.linalg.svd(a_blk, full_matrices=True)
+    k = s.shape[0]
+    if k < m:
+        s = jnp.concatenate([s, jnp.zeros((m - k,), s.dtype)])
+    return u, s[:m]
+
+
+def proxy_panel(u: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """The block's contribution to the proxy matrix: U @ diag(S)."""
+    return u * s[None, :]
+
+
+@jax.jit
+def merge_panels_svd(panels: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Paper-faithful merge: SVD of the proxy P = concat(panels, axis=1).
+
+    panels: (D, M, M) stacked U^i Sigma^i panels.
+    Returns (U, S) of P — equal to (U, S) of A up to block-diag unitary W.
+    """
+    d, m, _ = panels.shape
+    p = jnp.transpose(panels, (1, 0, 2)).reshape(m, d * m)
+    u, s, _ = jnp.linalg.svd(p, full_matrices=True)
+    k = s.shape[0]
+    if k < m:
+        s = jnp.concatenate([s, jnp.zeros((m - k,), s.dtype)])
+    return u, s[:m]
+
+
+@jax.jit
+def merge_grams_eigh(grams: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Beyond-paper merge: PP^T = sum_i G_i, so eigh of the summed gram
+    replaces the proxy SVD entirely.
+
+    grams: (D, M, M) local gram matrices (or a pre-reduced (M, M)).
+    """
+    g = grams.sum(axis=0) if grams.ndim == 3 else grams
+    return eigh_to_svd(g)
+
+
+def right_vectors(
+    a_blk: jnp.ndarray, u: jnp.ndarray, s: jnp.ndarray, *, rcond: float = 1e-7
+) -> jnp.ndarray:
+    """Recover this block's slice of the right singular vectors:
+    V_blk = A_blk^T @ U @ diag(1/S)  (rows of V for this block's columns).
+
+    The paper lists right-vector recovery as future work; it falls out of
+    the factorization with one local matmul per block (U is M x M and is
+    broadcast, never the full V).
+    """
+    smax = jnp.max(s)
+    inv = jnp.where(s > rcond * smax, 1.0 / jnp.where(s == 0, 1.0, s), 0.0)
+    return (a_blk.T @ u) * inv[None, :]

@@ -1,0 +1,2 @@
+from repro.ft.elastic import ElasticPlan, build_mesh, plan_mesh, recover  # noqa: F401
+from repro.ft.straggler import StragglerConfig, StragglerMonitor  # noqa: F401

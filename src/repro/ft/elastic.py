@@ -1,0 +1,81 @@
+"""Elastic scaling: rebuild the mesh after host loss (or growth) and
+restore training state onto it.
+
+Recovery contract (synchronous SPMD, checkpoint-based):
+
+  1. Failure detected (heartbeat timeout / straggler eviction / XLA
+     collective error surfaced as an exception in the step loop).
+  2. Survivors agree on the new device set (on TPU pods this is the
+     restart controller's job; here: ``plan_mesh`` picks the largest
+     (data x model) grid that fits the survivors, preserving the model
+     axis if possible since TP size is baked into activation layouts).
+  3. Every survivor restores the latest checkpoint with shardings built
+     for the NEW mesh (checkpoint/ckpt.py restore is mesh-agnostic).
+  4. The data pipeline rewinds to the checkpoint step (data/tokens.py is
+     step-addressable, so no replay buffer is needed).
+
+The mesh math is device-count-agnostic and unit-tested on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models.layers import ShardCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dropped_devices: int
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def plan_mesh(num_devices: int, *, model_parallel: int = 16,
+              multi_pod_threshold: int = 512) -> ElasticPlan:
+    """Largest usable (pod, data, model) grid <= num_devices.
+
+    Keeps the model axis fixed (activation/weight layouts depend on it)
+    and shrinks data parallelism; drops remainder devices.  Falls back to
+    smaller TP only when fewer than ``model_parallel`` devices survive.
+    """
+    mp = min(model_parallel, num_devices)
+    while num_devices % mp and mp > 1:
+        mp -= 1
+    dp = num_devices // mp
+    used = dp * mp
+    if used >= multi_pod_threshold and dp % 2 == 0:
+        return ElasticPlan((2, dp // 2, mp), ("pod", "data", "model"),
+                           num_devices - used)
+    return ElasticPlan((dp, mp), ("data", "model"), num_devices - used)
+
+
+def build_mesh(plan: ElasticPlan, devices: Optional[Sequence] = None) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    devices = devices[: plan.num_devices]
+    import numpy as np
+    return Mesh(np.asarray(devices).reshape(plan.shape), plan.axis_names)
+
+
+def recover(checkpointer, cfg, tcfg, survivors: Sequence, *,
+            model_parallel: int = 16):
+    """Full recovery path: survivors -> new mesh -> restored state.
+    Returns (mesh, ctx, state, meta)."""
+    from repro.train.step import state_shardings
+
+    plan = plan_mesh(len(survivors), model_parallel=model_parallel)
+    mesh = build_mesh(plan, survivors)
+    ctx = ShardCtx(mesh=mesh)
+    shardings = state_shardings(cfg, tcfg, ctx)
+    state, meta = checkpointer.restore(shardings=shardings)
+    return mesh, ctx, state, meta

@@ -1,0 +1,58 @@
+"""Straggler detection & mitigation.
+
+At thousand-node scale the slowest host sets the step time (synchronous
+SPMD).  This module tracks per-host step-time EWMAs, flags persistent
+outliers, and drives the mitigation policy:
+
+  * ``flag``     — log & export the host list (ops integration)
+  * ``evict``    — treat the host as failed: trigger an elastic re-mesh
+                   (ft/elastic.py) without it at the next checkpoint
+                   boundary
+
+Timing source: on a real deployment every host reports its local step
+wall-time through the metrics all-gather that the train loop already
+does; here the monitor consumes whatever times are fed to ``observe``
+(tests feed synthetic distributions)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    alpha: float = 0.1           # EWMA coefficient
+    threshold: float = 1.5       # flag if ewma > threshold * median
+    patience: int = 10           # consecutive flagged steps before evict
+    policy: str = "flag"         # "flag" | "evict"
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig, num_hosts: int):
+        self.cfg = cfg
+        self.num_hosts = num_hosts
+        self.ewma: List[Optional[float]] = [None] * num_hosts
+        self.flag_streak = [0] * num_hosts
+
+    def observe(self, step_times: Dict[int, float]) -> Dict[str, list]:
+        """Feed one step's per-host wall times.  Returns the current
+        flagged / evict-recommended host lists."""
+        for h, t in step_times.items():
+            prev = self.ewma[h]
+            self.ewma[h] = t if prev is None else \
+                (1 - self.cfg.alpha) * prev + self.cfg.alpha * t
+        known = sorted(e for e in self.ewma if e is not None)
+        if not known:
+            return {"flagged": [], "evict": []}
+        median = known[len(known) // 2]
+        flagged = []
+        for h, e in enumerate(self.ewma):
+            if e is not None and e > self.cfg.threshold * median:
+                self.flag_streak[h] += 1
+                flagged.append(h)
+            else:
+                self.flag_streak[h] = 0
+        evict = [h for h in flagged
+                 if self.flag_streak[h] >= self.cfg.patience
+                 and self.cfg.policy == "evict"]
+        return {"flagged": flagged, "evict": evict}

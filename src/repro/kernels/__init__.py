@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the perf-critical compute layers, with pure-jnp
+oracles (ref.py) and jit'd dispatch wrappers (ops.py)."""
+from repro.kernels import ops, ref  # noqa: F401

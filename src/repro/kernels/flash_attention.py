@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: fused multi-head attention (FlashAttention-style
+online softmax) with causal masking, sliding windows (gemma2 local
+layers), GQA head sharing and tanh logit soft-capping.
+
+Tiling: grid = (B, Hq, Sq/block_q, Sk/block_k) with the KV dimension
+innermost (sequential on TPU), so the running max / denominator / output
+accumulator for one query tile live in VMEM scratch across KV steps and
+HBM traffic is one pass over K and V per query tile.  Block sizes default
+to (block_q, block_k) = (128, 128): MXU-aligned on both matmuls
+(q @ k^T and p @ v) with head_dim the lane dimension.
+
+Fully-masked KV tiles (beyond the causal frontier or outside the sliding
+window) are skipped with pl.when — for causal prefill this halves the
+compute, for a w-window it makes the kernel O(S*w) instead of O(S^2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale, causal, window, softcap, block_q, block_k, sq, sk,
+):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Global token positions.  Queries are right-aligned against the KV
+    # sequence (sk >= sq covers chunked prefill against a cache prefix).
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + (sk - sq)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # Tile-level skip: is any (q, k) pair in this tile visible?
+    q_last = qi * block_q + block_q - 1 + (sk - sq)
+    k_first = ki * block_k
+    visible = k_first <= q_last if causal else True
+    if window > 0:
+        q_first = qi * block_q + (sk - sq)
+        k_last = ki * block_k + block_k - 1
+        visible = jnp.logical_and(visible, k_last > q_first - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        mask = jnp.ones((block_q, block_k), dtype=bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]  # (block_q, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)  # (block_k, d)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zeros
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Sk, D)
+    v: jnp.ndarray,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"seq lens ({sq},{sk}) must divide blocks ({block_q},{block_k})")
+
+    grid = (b, hq, sq // block_q, sk // block_k)
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, sq=sq, sk=sk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,115 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles: backend dispatch (compiled Pallas on TPU, interpret=True
+elsewhere, pure-jnp oracle as an escape hatch via REPRO_KERNELS=ref),
+shape padding to hardware-aligned tiles, and dtype policy (bf16 inputs,
+f32 accumulation).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import blockgram as _bg
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _mode() -> str:
+    """'pallas' (compiled), 'interpret' (kernel emulation), or 'ref'
+    (pure-jnp oracle).  Non-TPU backends default to 'ref': it is
+    differentiable and lowers clean HLO; 'interpret' executes the actual
+    kernel bodies and is what the kernel test-suite pins against."""
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env in ("ref", "interpret", "pallas"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> Tuple[jnp.ndarray, int]:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def blockgram(a_blk: jnp.ndarray, *, block_n: int = 512) -> jnp.ndarray:
+    """G = A @ A^T (f32) for a short-and-fat block; pads M to the 8-sublane
+    grid and N to block_n (zero columns leave the gram unchanged)."""
+    mode = _mode()
+    if mode == "ref":
+        return _ref.blockgram(a_blk)
+    m = a_blk.shape[0]
+    a_pad, pad_m = _pad_axis(a_blk, 0, 8)
+    block_n = min(block_n, max(128, a_pad.shape[1]))
+    a_pad, _ = _pad_axis(a_pad, 1, block_n)
+    g = _bg.blockgram(a_pad, block_n=block_n, interpret=(mode == "interpret"))
+    return g[:m, :m] if pad_m else g
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    """Fused GQA attention.  For causal self-attention (sq == sk) with
+    unaligned lengths, Q and KV are both padded at the END: padded keys
+    sit strictly in the future of every real query, so causality masks
+    them and real rows are unchanged.  Other unaligned cases (cross /
+    non-causal / right-aligned) fall back to the oracle."""
+    mode = _mode()
+    sq, sk = q.shape[2], k.shape[2]
+    pq, pk = (-sq) % block_q, (-sk) % block_k
+    need_pad = bool(pq or pk)
+    if mode == "ref" or sq < 8 or \
+            (need_pad and not (causal and sq == sk)):
+        return _ref.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+        )
+    if need_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    out = _fa.flash_attention(
+        q, k, v,
+        causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=(mode == "interpret"),
+    )
+    return out[:, :, :sq, :] if need_pad else out
+
+
+def ssd_scan(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    b_mat: jnp.ndarray,
+    c_mat: jnp.ndarray,
+    *,
+    chunk: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba-2 SSD chunked scan; returns (y, final_state)."""
+    from repro import perf
+
+    mode = _mode()
+    seq = x.shape[1]
+    if mode == "ref" or seq % chunk or seq < chunk:
+        if perf.enabled("ssd_chunked") and seq % chunk == 0 and seq >= chunk:
+            return _ref.ssd_scan_chunked(x, dt, a, b_mat, c_mat, chunk=chunk)
+        return _ref.ssd_scan(x, dt, a, b_mat, c_mat, return_state=True)
+    return _ssd.ssd_scan(
+        x, dt, a, b_mat, c_mat, chunk=chunk, interpret=(mode == "interpret")
+    )

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: Mamba-2 SSD (state-space duality) chunked scan.
+
+The SSD insight (arXiv:2405.21060): the selective-SSM recurrence
+    h_t = a_t h_{t-1} + (dt_t x_t) outer B_t,    y_t = h_t C_t
+splits into chunks of length Q where the *intra-chunk* part is a masked
+attention-like matmul (MXU-friendly) and the *inter-chunk* part is a
+cheap recurrence on the (P x N) chunk states.
+
+Tiling: grid = (B, H, L/Q) with the chunk index innermost — sequential
+on TPU — so the running state h (P x N) lives in VMEM scratch across
+chunk steps.  Per step we load the chunk's x (Q,P), dt (Q,), B,C (Q,N)
+tiles, do three MXU matmuls (C B^T, S X, C h) and one rank-Q state
+update, and never materialize the (L x L) semiseparable matrix.
+
+Q defaults to 128 (MXU-aligned); P, N are 64/128 for all assigned
+configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
+                *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0]                                  # scalar decay rate (this head)
+    x = x_ref[0, 0].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)         # (Q, 1)
+    b = b_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)           # (Q, N)
+
+    # log-decay prefix within the chunk: la[i] = sum_{k<=i} dt_k * a
+    seg = dt[:, 0] * a                            # (Q,)
+    la = jnp.cumsum(seg)                          # (Q,)
+
+    # --- intra-chunk: attention-like masked matmul --------------------
+    # scores[i, j] = (C_i . B_j) * exp(la_i - la_j) * dt_j   for i >= j
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    li = la[:, None]
+    lj = la[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(li - lj), 0.0)
+    scores = cb * decay * dt[:, 0][None, :]
+    y_intra = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (Q, P)
+
+    # --- inter-chunk: contribution of the carried state ----------------
+    # y_inter[i] = exp(la_i) * (C_i . h_in)  -> (Q, P)
+    h_in = h_ref[...]                              # (P, N)
+    ch = jax.lax.dot_general(c, h_in, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, P)
+    y_inter = jnp.exp(la)[:, None] * ch
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # --- state update ---------------------------------------------------
+    # h_out = exp(la_Q) h_in + sum_j exp(la_Q - la_j) dt_j (x_j outer B_j)
+    w = jnp.exp(la[-1] - la) * dt[:, 0]            # (Q,)
+    upd = jax.lax.dot_general(x * w[:, None], b, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    h_new = jnp.exp(la[-1]) * h_in + upd
+    h_ref[...] = h_new
+
+    @pl.when(ci == pl.num_programs(2) - 1)
+    def _flush():
+        hout_ref[0, 0] = h_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,    # (B, L, H, P)
+    dt: jnp.ndarray,   # (B, L, H)
+    a: jnp.ndarray,    # (H,)
+    b_mat: jnp.ndarray,  # (B, L, G, N)
+    c_mat: jnp.ndarray,  # (B, L, G, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.  Returns (y (B,L,H,P), final state (B,H,P,N)).
+
+    Heads share B/C projections within groups of size H // G.
+    L must divide by ``chunk``.
+    """
+    bsz, seq, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    if seq % chunk:
+        raise ValueError(f"L={seq} must divide chunk={chunk}")
+    chunk = min(chunk, seq)
+
+    # Layouts: per-(batch, head) planes with the chunk dim innermost.
+    xs = jnp.transpose(x, (0, 2, 1, 3))          # (B, H, L, P)
+    dts = jnp.transpose(dt, (0, 2, 1))[..., None]  # (B, H, L, 1)
+    bs = jnp.transpose(b_mat, (0, 2, 1, 3))      # (B, G, L, N)
+    cs = jnp.transpose(c_mat, (0, 2, 1, 3))
+
+    grid = (bsz, h, seq // chunk)
+    y, h_fin = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, hh, ci: (hh,)),
+            pl.BlockSpec((1, 1, chunk, p), lambda bb, hh, ci: (bb, hh, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda bb, hh, ci: (bb, hh, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bb, hh, ci, r=rep: (bb, hh // r, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bb, hh, ci, r=rep: (bb, hh // r, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bb, hh, ci: (bb, hh, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bb, hh, ci: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, seq, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), xs, dts, bs, cs)
+
+    return jnp.transpose(y, (0, 2, 1, 3)), h_fin

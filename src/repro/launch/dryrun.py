@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, record memory/cost analysis + roofline terms.
+
+This is how the distribution config is proven coherent without hardware:
+a sharding mismatch, an impossible collective, or a partitioner error is
+a hard failure here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+
+The two mandatory lines above run BEFORE any other import: jax locks the
+device count at first init, and the dry-run needs 512 host devices.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Kernels must lower the pure-jnp reference path in the dry-run: the HLO
+# is what roofline terms are derived from, and Pallas doesn't compile for
+# the CPU stand-in backend.  (Real TPU runs use the Pallas kernels.)
+os.environ.setdefault("REPRO_KERNELS", "ref")
+
+from repro.configs.base import ARCH_IDS, SHAPES, cells, get_config
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.io import input_specs
+from repro.models.layers import ShardCtx
+from repro.models.transformer import decode_step, prefill_forward
+from repro.train.step import TrainConfig, abstract_train_state, \
+    make_train_step, state_shardings
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               rules: Optional[dict] = None, tcfg: Optional[TrainConfig] = None):
+    """Lower + compile one cell.  Returns (compiled, lowered, ctx)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if rules is None and shape.name == "long_500k":
+        # batch=1: the data axis shards the KV/state SEQUENCE instead of
+        # the batch (sequence parallelism for long-context decode).
+        from repro.models.layers import DEFAULT_RULES
+        rules = {**DEFAULT_RULES, "batch": None}
+    ctx = ShardCtx(mesh=mesh, rules=rules)
+    tcfg = tcfg or TrainConfig(remat="dots")
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, tcfg, ctx)
+        state = abstract_train_state(cfg, tcfg)
+        st_sh = state_shardings(cfg, tcfg, ctx)
+        args, shardings = input_specs(cfg, shape, ctx)
+        fn = jax.jit(step, in_shardings=(st_sh, shardings["batch"]),
+                     donate_argnums=(0,))
+        lowered = fn.lower(state, args["batch"])
+    elif shape.kind == "prefill":
+        def serve_prefill(params, batch):
+            return prefill_forward(cfg, params, batch, ctx)
+
+        from repro.models.schema import abstract_params, param_shardings
+        params = abstract_params(cfg)
+        p_sh = param_shardings(cfg, ctx)
+        args, shardings = input_specs(cfg, shape, ctx)
+        fn = jax.jit(serve_prefill, in_shardings=(p_sh, shardings["batch"]))
+        lowered = fn.lower(params, args["batch"])
+    else:  # decode
+        seq_sharded = shape.name == "long_500k"
+
+        def serve_step(params, cache, batch):
+            return decode_step(cfg, params, cache, batch, ctx,
+                               seq_sharded=seq_sharded)
+
+        from repro.models.schema import abstract_params, param_shardings
+        params = abstract_params(cfg)
+        p_sh = param_shardings(cfg, ctx)
+        args, shardings = input_specs(cfg, shape, ctx)
+        fn = jax.jit(serve_step,
+                     in_shardings=(p_sh, shardings["cache"],
+                                   shardings["batch"]),
+                     donate_argnums=(1,))
+        lowered = fn.lower(params, args["cache"], args["batch"])
+
+    compiled = lowered.compile()
+    return compiled, lowered, ctx
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rules: Optional[dict] = None, verbose: bool = True) -> dict:
+    t0 = time.time()
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = 512 if multi_pod else 256
+    try:
+        compiled, lowered, _ = lower_cell(arch, shape_name,
+                                          multi_pod=multi_pod, rules=rules)
+    except Exception as e:  # a failure here is a bug in the system
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape_name,
+                "mesh": _mesh_name(multi_pod), "ok": False,
+                "error": f"{type(e).__name__}: {e}"}
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    roof = rl.build(arch, shape, _mesh_name(multi_pod), chips, cost, hlo, cfg)
+    result = {
+        "ok": True,
+        **roof.row(),
+        "compile_s": round(time.time() - t0, 1),
+        "memory": _mem_dict(mem),
+    }
+    if verbose:
+        ma = result["memory"]
+        print(f"[{arch} x {shape_name} x {result['mesh']}] ok "
+              f"compile={result['compile_s']}s "
+              f"bytes/dev={ma.get('argument_size_in_bytes', 0)/1e9:.2f}+"
+              f"{ma.get('temp_size_in_bytes', 0)/1e9:.2f}GB "
+              f"t_comp={roof.t_compute*1e3:.1f}ms t_mem={roof.t_memory*1e3:.1f}ms "
+              f"t_coll={roof.t_collective*1e3:.1f}ms -> {roof.bottleneck} "
+              f"useful={roof.useful_flop_ratio:.2f} "
+              f"roofline={roof.roofline_fraction:.2f}", flush=True)
+    return result
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="every assigned (arch x shape) cell")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 two-pod mesh (default: 16x16 single pod)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append results to a JSON file")
+    args = ap.parse_args()
+
+    todo = []
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in cells(arch):
+                for mp in meshes:
+                    todo.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            todo.append((args.arch, args.shape, mp))
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r.get("ok")}
+
+    for arch, shape, mp in todo:
+        if (arch, shape, _mesh_name(mp)) in done:
+            print(f"[{arch} x {shape} x {_mesh_name(mp)}] cached, skip",
+                  flush=True)
+            continue
+        res = run_cell(arch, shape, multi_pod=mp)
+        results = [r for r in results
+                   if not (r["arch"] == arch and r["shape"] == shape
+                           and r["mesh"] == res["mesh"])]
+        results.append(res)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=str)
+
+    failures = [r for r in results if not r.get("ok")]
+    print(f"\n{len(results) - len(failures)}/{len(results)} cells ok")
+    for r in failures:
+        print(f"FAILED: {r['arch']} x {r['shape']} x {r['mesh']}: {r['error']}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

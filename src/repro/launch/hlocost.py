@@ -1,0 +1,370 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body
+ONCE, which under-counts every lax.scan in the model (layer stacks, KV
+chunks, microbatches) by the trip count.  This walker parses the
+post-SPMD HLO text, resolves the call graph (while / fusion / call /
+conditional), multiplies while bodies by their ``known_trip_count``
+backend config, and accumulates:
+
+  * flops            — 2 * prod(result_dims) * contraction for dots,
+                       elementwise sizes for fused math
+  * bytes            — operand + result bytes of data-moving ops
+                       (fusions, dots, copies, scatters, collectives):
+                       an HBM-traffic model of the scheduled module
+  * collective bytes — per collective kind, result bytes x trip factor
+
+All numbers are per-device (the SPMD module is per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[a-z]\d*[a-z0-9]*"
+    r"\[[^\]]*\](?:\{[^}]*\})?))\s+([\w\-]+)\(")
+_TRIP = re.compile(r'known_trip_count[":{]+n[":]+(\d+)')
+_CALLS = re.compile(r"calls=%([\w\.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%([\w\.\-]+)")
+_COND_BODY = re.compile(r"condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUE_FALSE = re.compile(
+    r"true_computation=%([\w\.\-]+),\s*false_computation=%([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+
+
+def shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    convert_bytes: float = 0.0  # pure bf16<->f32 dtype-convert traffic
+    collective: Optional[Dict[str, float]] = None
+    collective_count: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.collective is None:
+            self.collective = {}
+        if self.collective_count is None:
+            self.collective_count = {}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.convert_bytes += other.convert_bytes * mult
+        for k, v in other.collective.items():
+            self.collective[k] = self.collective.get(k, 0.0) + v * mult
+        for k, v in other.collective_count.items():
+            self.collective_count[k] = \
+                self.collective_count.get(k, 0.0) + v * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective.values())
+
+    @property
+    def bytes_tpu(self) -> float:
+        """HBM-traffic estimate for the TPU TARGET: the CPU stand-in
+        backend cannot execute bf16 dots natively, so XLA materializes
+        f32 copies of every bf16 dot operand (often hoisted to whole
+        stacked buffers).  TPU MXUs consume bf16 directly — that traffic
+        does not exist on the target, so the memory roofline term
+        excludes it (raw CPU-module bytes are kept in `bytes`)."""
+        return max(0.0, self.bytes - self.convert_bytes)
+
+
+_BYTE_OPS = {
+    "fusion", "dot", "convolution", "copy", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "sort", "transpose",
+    "concatenate", "pad", "select-and-scatter", "custom-call", "iota",
+    "broadcast", "compare", "select", "add", "multiply", "subtract",
+    "divide", "maximum", "minimum", "exponential", "tanh", "rsqrt", "log",
+    "convert", "reduce-window", "cholesky", "triangular-solve",
+} | set(COLLECTIVES)
+
+_FLOP_ELEMWISE = {
+    "add", "multiply", "subtract", "divide", "maximum", "minimum",
+    "exponential", "tanh", "rsqrt", "log", "compare", "select", "reduce",
+}
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations = self._split(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self._fusion_io_memo: Dict[str, Dict] = {}
+        self._pure_convert_memo: Dict[str, bool] = {}
+
+    def _fusion_io(self, comp: str) -> Dict:
+        """Model a fusion body's true I/O.
+
+        XLA fusions that dynamic-slice a big operand read only the slice,
+        and fusions whose root dynamic-update-slices into an operand alias
+        it in place (write = update slice).  Returns
+          {"param_reads": {param_idx: bytes_actually_read},
+           "dus_write": bytes or None}
+        Params not listed read fully; result writes fully unless dus.
+        """
+        if comp in self._fusion_io_memo:
+            return self._fusion_io_memo[comp]
+        lines = self.computations.get(comp, [])
+        shapes: Dict[str, str] = {}
+        param_idx: Dict[str, int] = {}
+        defs: Dict[str, Tuple[str, List[str]]] = {}
+        for line in lines:
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            name, shape_str, op = m.group(1), m.group(2), m.group(3)
+            shapes[name] = shape_str
+            ops = _OPERANDS.findall(
+                line[line.index("(") + 1:].split(")")[0])
+            defs[name] = (op, ops)
+            if op == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", line)
+                if pm:
+                    param_idx[name] = int(pm.group(1))
+
+        def trace_to_param(name: str, depth=0) -> Optional[str]:
+            if name in param_idx:
+                return name
+            if depth > 4 or name not in defs:
+                return None
+            op, ops = defs[name]
+            # convert included: the CPU backend round-trips bf16 buffers
+            # through f32 for ops it can't do natively — aliasing-wise the
+            # converted buffer still stands in for the parameter.
+            if op in ("bitcast", "reshape", "copy", "transpose",
+                      "convert") and ops:
+                return trace_to_param(ops[0], depth + 1)
+            return None
+
+        # pure dtype-convert fusion? (copy/bitcast/broadcast of converts)
+        _PURE = {"parameter", "convert", "bitcast", "copy", "reshape",
+                 "transpose", "broadcast", "constant", "tuple",
+                 "get-tuple-element"}
+        ops_seen = {d[0] for d in defs.values()}
+        self._pure_convert_memo[comp] = (
+            "convert" in ops_seen and ops_seen <= _PURE)
+
+        reads: Dict[int, int] = {}
+        dus_write = None
+        for line in lines:
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            name, shape_str, op = m.group(1), m.group(2), m.group(3)
+            ops = _OPERANDS.findall(
+                line[line.index("(") + 1:].split(")")[0])
+            if op == "dynamic-slice" and ops:
+                p = trace_to_param(ops[0])
+                if p is not None:
+                    _, sl = shape_elems_bytes(shape_str)
+                    i = param_idx[p]
+                    reads[i] = reads.get(i, 0) + sl
+            elif op == "dynamic-update-slice" and len(ops) >= 2:
+                upd = shape_elems_bytes(shapes.get(ops[1], ""))[1]
+                dus_write = (dus_write or 0) + upd
+                p = trace_to_param(ops[0])
+                if p is not None:
+                    i = param_idx[p]
+                    reads.setdefault(i, 0)  # aliased: not read
+        out = {"param_reads": reads, "dus_write": dus_write}
+        self._fusion_io_memo[comp] = out
+        return out
+
+    # -- parsing --------------------------------------------------------
+    @staticmethod
+    def _split(text: str) -> Dict[str, List[str]]:
+        comps: Dict[str, List[str]] = {}
+        cur: Optional[str] = None
+        entry: Optional[str] = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HDR.match(line.strip())
+                if m and line.rstrip().endswith("{"):
+                    cur = m.group(2)
+                    comps[cur] = []
+                    if m.group(1):
+                        entry = cur
+            else:
+                if line.strip() == "}":
+                    cur = None
+                else:
+                    comps[cur].append(line)
+        comps["__entry__"] = comps.get(entry, [])  # type: ignore
+        return comps
+
+    # -- per-computation cost -------------------------------------------
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # break cycles defensively
+        lines = self.computations.get(name, [])
+        shapes: Dict[str, str] = {}
+        # first pass: symbol table (including parameters)
+        for line in lines:
+            m = _INSTR.match(line)
+            if m:
+                shapes[m.group(1)] = m.group(2)
+        total = Cost()
+        for line in lines:
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            _, shape_str, op = m.group(1), m.group(2), m.group(3)
+            elems, nbytes = shape_elems_bytes(shape_str)
+
+            if op == "dot":
+                paren = line[line.index(" dot(") + 5:]
+                ops = _OPERANDS.findall(paren.split(")")[0])
+                lhs_shape = shapes.get(ops[0], "") if ops else ""
+                cm = _CONTRACT.search(line)
+                contract = 1
+                if cm and lhs_shape:
+                    dims_m = _SHAPE_RE.search(lhs_shape)
+                    if dims_m:
+                        lhs_dims = [int(d) for d in
+                                    dims_m.group(2).split(",") if d]
+                        for ci in cm.group(1).split(","):
+                            if ci:
+                                contract *= lhs_dims[int(ci)]
+                total.flops += 2.0 * elems * contract
+                total.bytes += nbytes + self._operand_bytes(line, shapes)
+            elif op == "while":
+                mb = _COND_BODY.search(line)
+                trip = 1
+                tm = _TRIP.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                if mb:
+                    total.add(self.comp_cost(mb.group(2)), mult=trip)
+            elif op == "conditional":
+                names = []
+                bm = _BRANCHES.search(line)
+                if bm:
+                    names = _OPERANDS.findall(bm.group(1))
+                else:
+                    tf = _TRUE_FALSE.search(line)
+                    if tf:
+                        names = [tf.group(1), tf.group(2)]
+                branch_costs = [self.comp_cost(n) for n in names]
+                if branch_costs:
+                    # runtime takes one branch; charge the max
+                    worst = max(branch_costs, key=lambda c: c.flops + c.bytes)
+                    total.add(worst)
+            elif op == "fusion":
+                cm = _CALLS.search(line)
+                if not cm:
+                    total.bytes += nbytes + self._operand_bytes(line, shapes)
+                    continue
+                child = self.comp_cost(cm.group(1))
+                # Fusion-body intermediates live in registers: charge the
+                # body's flops/collectives; data movement is the call
+                # site's operands + result, adjusted for in-fusion
+                # dynamic-slice reads and in-place DUS writes.
+                total.add(Cost(flops=child.flops,
+                               collective=dict(child.collective),
+                               collective_count=dict(
+                                   child.collective_count)))
+                io = self._fusion_io(cm.group(1))
+                operand_list = self._operand_bytes_list(line, shapes)
+                op_bytes = 0
+                for i, ob in enumerate(operand_list):
+                    op_bytes += min(io["param_reads"].get(i, ob), ob)
+                if io["dus_write"] is not None:
+                    op_bytes += io["dus_write"]
+                else:
+                    op_bytes += nbytes
+                total.bytes += op_bytes
+                if self._pure_convert_memo.get(cm.group(1)):
+                    total.convert_bytes += op_bytes
+            elif op == "call" or op == "async-start":
+                am = _TO_APPLY.search(line)
+                if am:
+                    total.add(self.comp_cost(am.group(1)))
+            elif op in COLLECTIVES:
+                total.collective[op] = total.collective.get(op, 0.0) + nbytes
+                total.collective_count[op] = \
+                    total.collective_count.get(op, 0.0) + 1
+                total.bytes += nbytes
+            elif op == "dynamic-update-slice":
+                ops_list = self._operand_bytes_list(line, shapes)
+                upd = ops_list[1] if len(ops_list) > 1 else 0
+                total.bytes += 2 * upd  # in-place: write slice + read update
+            elif op == "convert":
+                total.bytes += nbytes
+                total.convert_bytes += nbytes
+            elif op in _FLOP_ELEMWISE:
+                total.flops += elems
+                # elementwise in the main computation stream still moves data
+                total.bytes += nbytes
+            elif op in _BYTE_OPS:
+                total.bytes += nbytes
+        self._memo[name] = total
+        return total
+
+    def _operand_bytes_list(self, line: str, shapes: Dict[str, str]):
+        paren = line[line.index("(") + 1:]
+        depth = 1
+        arg = []
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            arg.append(ch)
+        names = _OPERANDS.findall("".join(arg))
+        return [shape_elems_bytes(shapes.get(n, ""))[1] for n in names]
+
+    def _operand_bytes(self, line: str, shapes: Dict[str, str]) -> int:
+        paren = line[line.index("(") + 1:]
+        depth = 1
+        arg = []
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            arg.append(ch)
+        names = _OPERANDS.findall("".join(arg))
+        return sum(shape_elems_bytes(shapes.get(n, ""))[1] for n in names)
+
+    def entry_cost(self) -> Cost:
+        return self.comp_cost("__entry__")
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before
+the first jax device query.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh: one v5e pod = (16, 16) = 256 chips,
+    ("data", "model"); two pods = (2, 16, 16) = 512 chips with the "pod"
+    axis outermost (slow DCI links between pods, fast ICI within)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host actually has (tests / examples)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    while n % mp:
+        mp -= 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,171 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_bytes / (chips * LINK_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (per-device
+program -> multiplied out to global).  collective_bytes is parsed from
+the post-SPMD HLO text: the summed result-shape bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute.
+
+Hardware model (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "  %x = (f32[8,128]{1,0}, f32[4]) all-gather(...)" or
+# "  ROOT %y = bf16[2,16]{1,0} all-reduce(%a, ...)"
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes (per device program)."""
+    out: Dict[str, int] = {op: 0 for op in _COLLECTIVES}
+    counts: Dict[str, int] = {op: 0 for op in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op")
+        out[op] += _shape_bytes(m.group("shapes"))
+        counts[op] += 1
+    out_all = dict(out)
+    out_all["_counts"] = counts  # type: ignore
+    return out_all
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float          # analytic 6ND (train) / 2ND (inference)
+    collective_detail: Optional[Dict[str, int]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs — how much compiled compute is
+        'useful' (catches remat recompute, padding waste, redundancy)."""
+        total = self.hlo_flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of peak useful-FLOPs: the ideal step time
+        is bounded below by max(terms); useful work is model_flops."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_bound <= 0:
+            return 0.0
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / t_bound
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_global": self.hlo_flops_per_chip * self.chips,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "collective_detail": self.collective_detail,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs per step: 6*N_active*tokens for training,
+    2*N_active*tokens for inference forward (decode: tokens = batch)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def build(arch: str, shape, mesh_name: str, chips: int, cost: dict,
+          hlo_text: str, cfg) -> Roofline:
+    """Roofline terms from the compiled module.  Primary source is the
+    trip-count-aware HLO walker (launch/hlocost.py) — XLA's own
+    cost_analysis counts while bodies once, undercounting every scanned
+    layer stack; its raw numbers are kept in collective_detail for
+    cross-checking."""
+    from repro.launch import hlocost
+
+    c = hlocost.analyze(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops_per_chip=c.flops,
+        # TPU-target bytes: CPU-backend bf16->f32 dot-operand converts
+        # excluded (no such traffic on the MXU); raw bytes in detail.
+        hlo_bytes_per_chip=c.bytes_tpu,
+        collective_bytes_per_chip=c.collective_bytes,
+        model_flops=model_flops(cfg, shape),
+        collective_detail={
+            "bytes": {k: v for k, v in c.collective.items() if v},
+            "counts": {k: v for k, v in c.collective_count.items() if v},
+            "cpu_module_raw_bytes": c.bytes,
+            "cpu_convert_bytes_excluded": c.convert_bytes,
+            "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+            "xla_cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
+        },
+    )

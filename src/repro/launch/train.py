@@ -1,0 +1,79 @@
+"""Training launcher.
+
+Single-host:   PYTHONPATH=src python -m repro.launch.train --arch phi4-mini-3.8b \
+                   --smoke --steps 100
+Multi-host:    launched per-host by the cluster runtime with
+               --coordinator/--num-hosts/--host-id (jax.distributed), one
+               process per host, same command line everywhere.
+
+The production mesh shape comes from ft/elastic.plan_mesh over however
+many devices are actually present, so the same entrypoint drives 1-chip
+debugging and full pods — and a restart after host loss simply forms the
+smaller mesh and restores the latest checkpoint (elastic recovery).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
+from repro.data import tokens as data_mod
+from repro.ft.elastic import build_mesh, plan_mesh
+from repro.models.layers import ShardCtx
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, train
+from repro.train.step import TrainConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--remat", default="dots",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "galore"])
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    # multi-host (jax.distributed)
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-hosts", type=int, default=1)
+    ap.add_argument("--host-id", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.coordinator:
+        jax.distributed.initialize(args.coordinator, args.num_hosts,
+                                   args.host_id)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    n_dev = len(jax.devices())
+    if n_dev > 1 or args.model_parallel > 1:
+        plan = plan_mesh(n_dev, model_parallel=args.model_parallel)
+        mesh = build_mesh(plan)
+        ctx = ShardCtx(mesh=mesh)
+        print(f"mesh: {plan.shape} {plan.axis_names} "
+              f"({plan.dropped_devices} devices idle)")
+    else:
+        ctx = ShardCtx()
+
+    tcfg = TrainConfig(
+        optimizer=args.optimizer, remat=args.remat,
+        microbatches=args.microbatches,
+        adamw=AdamWConfig(lr=args.lr),
+        warmup_steps=max(10, args.steps // 20), total_steps=args.steps)
+    dcfg = data_mod.DataConfig(cfg.vocab_size, args.seq, args.global_batch)
+    lcfg = LoopConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir)
+    train(cfg, tcfg, lcfg, ctx, dcfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model definitions: layers, attention, MoE, SSM, transformer assembly,
+parameter schema, and input construction."""
+from repro.models.layers import ShardCtx, DEFAULT_RULES  # noqa: F401
+from repro.models.schema import (  # noqa: F401
+    abstract_params, init_params, param_shardings, param_specs,
+)
+from repro.models.transformer import (  # noqa: F401
+    decode_step, forward_logits, init_cache, train_loss,
+)

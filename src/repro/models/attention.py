@@ -1,0 +1,234 @@
+"""GQA attention block: train/prefill (fused-kernel or chunked-jnp) and
+single-token decode against a KV cache, with RoPE/M-RoPE, sliding
+windows, softcap and TP sharding via ShardCtx."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops, ref
+from repro.models.layers import ShardCtx, apply_mrope, apply_rope
+
+
+def _sharded_kv_update(cache: jnp.ndarray, new: jnp.ndarray,
+                       cache_len: jnp.ndarray, ctx: ShardCtx) -> jnp.ndarray:
+    """Write one KV entry into a SEQUENCE-SHARDED cache without the
+    all-gather a traced-index dynamic_update_slice provokes under GSPMD:
+    shard_map the update — only the shard owning position ``cache_len``
+    modifies its local slab, in place."""
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map  # type: ignore
+
+    axes = ctx.axes("seq_shard")
+    if ctx.mesh is None or not axes:
+        return jax.lax.dynamic_update_slice(cache, new, (0, 0, cache_len, 0))
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(None, None, axes, None)
+
+    def upd(c_loc, n_loc, clen):
+        s_loc = c_loc.shape[2]
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * ctx.mesh.shape[a] + jax.lax.axis_index(a)
+        local = clen - idx * s_loc
+        owner = (local >= 0) & (local < s_loc)
+        local = jnp.clip(local, 0, s_loc - 1)
+        cur = jax.lax.dynamic_slice(
+            c_loc, (0, 0, local, 0),
+            (c_loc.shape[0], c_loc.shape[1], 1, c_loc.shape[3]))
+        upd_val = jnp.where(owner, n_loc, cur)
+        return jax.lax.dynamic_update_slice(c_loc, upd_val, (0, 0, local, 0))
+
+    return shard_map(
+        upd, mesh=ctx.mesh,
+        in_specs=(spec, P(None, None, None, None), P()),
+        out_specs=spec, check_vma=False,
+    )(cache, new, cache_len)
+
+
+def _kv_shardable(cfg: ModelConfig, ctx: ShardCtx) -> bool:
+    if ctx.mesh is None:
+        return False
+    axes = ctx.axes("kv_heads")
+    if not axes:
+        return False
+    size = 1
+    for a in axes:
+        size *= ctx.mesh.shape[a]
+    return cfg.padded_kv_heads % size == 0
+
+
+def _rope(cfg: ModelConfig, x: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    if not cfg.use_rope:
+        return x
+    if cfg.use_mrope:
+        return apply_mrope(x, pos, cfg.rope_theta)
+    return apply_rope(x, pos, cfg.rope_theta)
+
+
+def attention(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,            # (B, S, D)
+    pos: jnp.ndarray,          # (B, S) or (B, S, 3) for M-RoPE
+    ctx: ShardCtx,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_x: Optional[jnp.ndarray] = None,   # cross-attention source
+    kv_pos: Optional[jnp.ndarray] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill / encoder).  With
+    return_kv=True also returns the (B, Hkv, S, Dh) post-RoPE K/V pair
+    (prefill cache filling)."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+
+    q = _rope(cfg, q, pos)
+    k = _rope(cfg, k, pos if kv_pos is None else kv_pos)
+
+    q = ctx.constrain(q, "batch", "seq", "heads", None)
+    kv_logical = "kv_heads" if _kv_shardable(cfg, ctx) else None
+    k = ctx.constrain(k, "batch", "seq", kv_logical, None)
+    v = ctx.constrain(v, "batch", "seq", kv_logical, None)
+
+    qh = jnp.transpose(q, (0, 2, 1, 3))
+    kh = jnp.transpose(k, (0, 2, 1, 3))
+    vh = jnp.transpose(v, (0, 2, 1, 3))
+
+    from repro import perf
+
+    big = s * src.shape[1] >= 2048 * 2048
+    if big:
+        flash = (ref.flash_attention_vjp if perf.enabled("flash_vjp")
+                 else ref.chunked_flash_attention)
+        out = flash(
+            qh, kh, vh, causal=causal, window=window,
+            softcap=cfg.logit_softcap, block_k=1024,
+        )
+    else:
+        out = ops.flash_attention(
+            qh, kh, vh, causal=causal, window=window, softcap=cfg.logit_softcap,
+        )
+    out = jnp.transpose(out, (0, 2, 1, 3))          # (B, S, Hp, Dh)
+    out = ctx.constrain(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = ctx.constrain(y, "batch", "seq", "embed")
+    if return_kv:
+        return y, (kh, vh)
+    return y
+
+
+def decode_attention(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,            # (B, 1, D)
+    pos: jnp.ndarray,          # (B, 1) or (B, 1, 3) current position ids
+    cache_k: jnp.ndarray,      # (B, Hkv, Smax, Dh)
+    cache_v: jnp.ndarray,
+    cache_len: jnp.ndarray,    # scalar int32: tokens already in cache
+    ctx: ShardCtx,
+    *,
+    window=0,                  # int or traced int32 (0 = full attention)
+    seq_sharded: bool = False,
+    update_cache: bool = True,
+    k_scale=None,              # (B, Hkv, Smax, 1) f32: int8 KV cache
+    v_scale=None,
+):
+    """One-token decode.  Writes the new KV at cache_len, attends over
+    positions <= cache_len.  With ``seq_sharded=True`` the cache sequence
+    axis is sharded ("seq_shard" rule) for long-context decode — the
+    softmax is then merged flash-style via XLA's partitioned reductions.
+    With an int8 cache (k_scale/v_scale given) dequantization folds into
+    the contractions (serve/kvquant.py).
+    Returns (y (B,1,D), new_k, new_v[, new_k_scale, new_v_scale])."""
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    q = _rope(cfg, q, pos)
+    k_new = _rope(cfg, k_new, pos)
+
+    kv_logical = "kv_heads" if (not seq_sharded and _kv_shardable(cfg, ctx)) else None
+    seq_logical = "seq_shard" if seq_sharded else None
+
+    from repro import perf
+    from repro.serve import kvquant
+
+    quant = k_scale is not None
+
+    if update_cache:
+        kn = jnp.transpose(k_new, (0, 2, 1, 3))
+        vn = jnp.transpose(v_new, (0, 2, 1, 3))
+        if quant:
+            kn, kn_s = kvquant.quantize(kn)
+            vn, vn_s = kvquant.quantize(vn)
+            k_scale = jax.lax.dynamic_update_slice(
+                k_scale, kn_s, (0, 0, cache_len, 0))
+            v_scale = jax.lax.dynamic_update_slice(
+                v_scale, vn_s, (0, 0, cache_len, 0))
+        else:
+            kn = kn.astype(cache_k.dtype)
+            vn = vn.astype(cache_v.dtype)
+        if seq_sharded and perf.enabled("local_kv_update"):
+            cache_k = _sharded_kv_update(cache_k, kn, cache_len, ctx)
+            cache_v = _sharded_kv_update(cache_v, vn, cache_len, ctx)
+        else:
+            cache_k = jax.lax.dynamic_update_slice(
+                cache_k, kn, (0, 0, cache_len, 0))
+            cache_v = jax.lax.dynamic_update_slice(
+                cache_v, vn, (0, 0, cache_len, 0))
+    cache_k = ctx.constrain(cache_k, "batch", kv_logical, seq_logical, None)
+    cache_v = ctx.constrain(cache_v, "batch", kv_logical, seq_logical, None)
+
+    hq, hkv = q.shape[2], cache_k.shape[1]
+    group = hq // hkv
+    smax, dh = cache_k.shape[2], cache_k.shape[3]
+
+    q32 = q.astype(jnp.float32) * (dh ** -0.5)      # (B, 1, Hq, Dh)
+    qg = q32.reshape(b, hkv, group, dh)              # one query token
+    if quant:
+        logits = kvquant.attend_q8(qg, cache_k, k_scale)
+    elif perf.enabled("decode_pet"):
+        # contract bf16 KV directly with f32 accumulation — no
+        # materialized f32 copy of the cache
+        logits = jnp.einsum("bhgk,bhsk->bhgs", qg.astype(cache_k.dtype),
+                            cache_k, preferred_element_type=jnp.float32)
+    else:
+        kk = cache_k.astype(jnp.float32)             # (B, Hkv, Smax, Dh)
+        logits = jnp.einsum("bhgk,bhsk->bhgs", qg, kk)  # (B, Hkv, G, Smax)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    kpos = jnp.arange(smax)[None, None, None, :]
+    valid = kpos <= cache_len
+    # ``window`` may be a traced per-layer value (gemma2 alternation):
+    # window <= 0 means full attention.
+    win = jnp.asarray(window, jnp.int32)
+    valid &= (win <= 0) | (kpos > (cache_len - win))
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if quant:
+        out = kvquant.combine_q8(probs, cache_v, v_scale)
+    elif perf.enabled("decode_pet"):
+        out = jnp.einsum("bhgs,bhsk->bhgk", probs.astype(cache_v.dtype),
+                         cache_v, preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bhgs,bhsk->bhgk", probs,
+                         cache_v.astype(jnp.float32))
+    out = out.reshape(b, 1, hq, dh).astype(x.dtype)
+    out = ctx.constrain(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = ctx.constrain(y, "batch", "seq", "embed")
+    if quant:
+        return y, cache_k, cache_v, k_scale, v_scale
+    return y, cache_k, cache_v

@@ -1,0 +1,89 @@
+"""Model input construction: real batches (tests/examples) and
+ShapeDtypeStruct stand-ins + shardings (dry-run), per (arch x shape)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.layers import ShardCtx
+from repro.models.transformer import cache_specs, init_cache
+
+
+def _mk(abstract: bool):
+    if abstract:
+        return jax.ShapeDtypeStruct
+    return lambda sh, dt: (jnp.zeros(sh, dt) if dt != jnp.int32
+                           else jnp.zeros(sh, jnp.int32))
+
+
+def train_batch(cfg: ModelConfig, batch: int, seq: int,
+                *, abstract: bool = False) -> Dict[str, Any]:
+    mk = _mk(abstract)
+    out = {
+        "tokens": mk((batch, seq), jnp.int32),
+        "labels": mk((batch, seq), jnp.int32),
+    }
+    if cfg.use_mrope:
+        out["pos"] = mk((batch, seq, 3), jnp.int32)
+    if cfg.is_encdec:
+        out["frames"] = mk((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_batch(cfg: ModelConfig, batch: int, *, abstract: bool = False
+                 ) -> Dict[str, Any]:
+    mk = _mk(abstract)
+    out = {"tokens": mk((batch, 1), jnp.int32)}
+    if cfg.use_mrope:
+        out["pos"] = mk((batch, 1, 3), jnp.int32)
+    return out
+
+
+def batch_specs(cfg: ModelConfig, ctx: ShardCtx, *, kind: str) -> Dict[str, P]:
+    b = ctx.axes("batch")
+    out = {"tokens": P(b, None)}
+    if kind == "train":
+        out["labels"] = P(b, None)
+    if cfg.use_mrope:
+        out["pos"] = P(b, None, None)
+    if cfg.is_encdec and kind != "decode":
+        out["frames"] = P(b, None, None)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, ctx: ShardCtx
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Dry-run inputs for one cell: (abstract args, sharding tree).
+
+    train/prefill -> (batch,), decode -> (cache, batch).  Shardings are
+    NamedShardings when ctx.mesh is set.
+    """
+    seq_sharded = shape.name == "long_500k"
+
+    def ns(spec_tree):
+        if ctx.mesh is None:
+            return spec_tree
+        return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind in ("train", "prefill"):
+        batch = train_batch(cfg, shape.global_batch, shape.seq_len,
+                            abstract=True)
+        kind = "train" if shape.kind == "train" else "prefill"
+        if kind == "prefill":
+            batch.pop("labels", None)
+        specs = batch_specs(cfg, ctx, kind=kind)
+        return {"batch": batch}, {"batch": ns(specs)}
+
+    # decode: cache sized to the context length
+    cache = init_cache(cfg, shape.global_batch, shape.seq_len,
+                       abstract=True)
+    batch = decode_batch(cfg, shape.global_batch, abstract=True)
+    cspecs = cache_specs(cfg, ctx, seq_sharded=seq_sharded)
+    bspecs = batch_specs(cfg, ctx, kind="decode")
+    return ({"cache": cache, "batch": batch},
+            {"cache": ns(cspecs), "batch": ns(bspecs)})

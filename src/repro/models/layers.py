@@ -1,0 +1,195 @@
+"""Shared model layers: norms, activations, RoPE / M-RoPE, embeddings,
+vocab-parallel cross-entropy, and the sharding-rule context."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Sharding context: logical axis names -> mesh axes
+# ---------------------------------------------------------------------------
+
+# Production rules.  Activations: batch over (pod, data); heads/mlp/vocab/
+# experts over model (Megatron TP); d_model replicated.  None => replicated.
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": ("data",),   # long-context decode: KV/sequence sharding
+    "heads": ("model",),
+    "kv_heads": ("model",),   # dropped per-arch when indivisible
+    "embed": None,
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "ssm_heads": ("model",),
+    "layers": None,
+    "opt_shard": ("data",),   # ZeRO-1 axis for optimizer moments
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Carries the mesh + logical->physical rules through model code.
+
+    With mesh=None every constraint is a no-op (single-device tests).
+    """
+
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Optional[Tuple[str, ...]]]] = None
+
+    def _rules(self) -> Dict[str, Optional[Tuple[str, ...]]]:
+        return self.rules if self.rules is not None else DEFAULT_RULES
+
+    def axes(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        r = self._rules().get(logical)
+        if r is None:
+            return None
+        # Drop axes missing from the mesh (e.g. "pod" on single-pod runs).
+        if self.mesh is not None:
+            r = tuple(a for a in r if a in self.mesh.axis_names)
+        return r if r else None
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.axes(l) for l in logical))
+
+    def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def constrain(self, x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(*logical))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, *, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               *, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+def activate(gate: jnp.ndarray, up: Optional[jnp.ndarray], kind: str) -> jnp.ndarray:
+    """swiglu/geglu are gated (need ``up``); gelu is the plain 2-matrix MLP."""
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if kind == "gelu":
+        return jax.nn.gelu(gate, approximate=True)
+    raise ValueError(kind)
+
+
+def gated(kind: str) -> bool:
+    return kind in ("swiglu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); pos: (B, S) int32 -> rotary-embedded x."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs    # (B, S, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : dh // 2], x32[..., dh // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, pos3: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """M-RoPE (qwen2-vl): pos3 (B, S, 3) = (temporal, height, width) ids.
+    The Dh/2 frequency pairs are split into three contiguous sections,
+    each rotated by its own position stream."""
+    dh = x.shape[-1]
+    half = dh // 2
+    s1 = half - 2 * (half // 3)
+    sections = (s1, half // 3, half // 3)
+    freqs = rope_freqs(dh, theta)
+    parts = []
+    lo = 0
+    for i, sec in enumerate(sections):
+        p = pos3[..., i]                                 # (B, S)
+        ang = p[..., None].astype(jnp.float32) * freqs[lo: lo + sec]
+        parts.append(ang)
+        lo += sec
+    ang = jnp.concatenate(parts, axis=-1)                # (B, S, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., :half], x32[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + vocab-parallel loss
+# ---------------------------------------------------------------------------
+
+def embed_lookup(embed: jnp.ndarray, tokens: jnp.ndarray, ctx: ShardCtx,
+                 *, scale: bool = False) -> jnp.ndarray:
+    """Token embedding with vocab-sharded table (XLA partitions the gather
+    into masked local lookups + all-reduce over the model axis)."""
+    x = jnp.take(embed, tokens, axis=0)
+    if scale:
+        x = (x.astype(jnp.float32) * jnp.sqrt(float(embed.shape[1]))).astype(x.dtype)
+    return ctx.constrain(x, "batch", "seq", "embed")
+
+
+def lm_logits(x: jnp.ndarray, head: jnp.ndarray, ctx: ShardCtx,
+              *, cap: float = 0.0) -> jnp.ndarray:
+    """x: (..., D) @ head (D, V) -> vocab-sharded logits (f32)."""
+    logits = jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                        head.astype(jnp.float32))
+    logits = softcap(logits, cap)
+    return ctx.constrain(logits, "batch", "seq", "vocab")
+
+
+def xent_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+              *, real_vocab: int) -> jnp.ndarray:
+    """Cross-entropy over a (possibly padded) vocab-sharded logits tensor.
+    Padded vocab slots are masked to -inf; labels < 0 are ignored."""
+    v = logits.shape[-1]
+    if real_vocab < v:
+        pad_mask = jnp.arange(v) >= real_vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    ok = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * ok) / jnp.maximum(jnp.sum(ok), 1.0)

@@ -1,0 +1,164 @@
+"""Mixture-of-Experts layer with expert parallelism.
+
+Routing is computed redundantly on every model-parallel rank (activations
+are TP-replicated), so *dispatch needs no communication at all*: each
+rank scatters its local tokens into a per-local-expert capacity buffer,
+runs its expert FFNs, and the weighted combine is folded into the same
+psum the dense TP MLP would need anyway.  Token->slot assignment uses the
+classic position-in-expert cumsum with capacity dropping (capacity_factor
+* K * T / E slots per expert per data shard).
+
+The layer runs inside an explicit shard_map region (deterministic
+collectives: exactly one psum over the model axis per MoE layer), nested
+in the jitted model function; with mesh=None it degrades to the local
+single-device implementation used by the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ShardCtx, activate
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def _capacity(cfg: ModelConfig, t_local: int) -> int:
+    c = math.ceil(cfg.experts_per_token * t_local * cfg.capacity_factor
+                  / cfg.num_experts)
+    return max(1, min(c, t_local * cfg.experts_per_token))
+
+
+def _route(cfg: ModelConfig, router_w: jnp.ndarray, x_flat: jnp.ndarray):
+    """(T, D) -> (gates (T, K), expert idx (T, K), aux load-balance loss)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)  # norm-topk
+    # Switch-style load balance: E * sum_e f_e * p_e
+    e = cfg.num_experts
+    frac = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=(0, 1)) * \
+        cfg.experts_per_token
+    mean_p = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_p)
+    return gates, idx, aux
+
+
+def _moe_compute(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                 e_lo: jnp.ndarray, e_local: int,
+                 w_gate, w_up, w_down) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Local-shard MoE: x (B_loc, S, D) + this rank's expert slab
+    [e_lo, e_lo + e_local) -> (partial y (B_loc, S, D), aux loss)."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    x_flat = x.reshape(t, d)
+
+    gates, idx, aux = _route(cfg, p["router"], x_flat)
+
+    from repro import perf
+
+    flat_idx = idx.reshape(t * k)
+    if perf.enabled("moe_sort_dispatch"):
+        # Sort-based position-in-expert: O(T*K log) on 1-D arrays instead
+        # of the (T*K, E) one-hot cumsum (REPRO_PERF=moe_sort_dispatch).
+        order = jnp.argsort(flat_idx, stable=True)
+        sorted_e = flat_idx[order]
+        arange = jnp.arange(t * k, dtype=jnp.int32)
+        first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        pos_sorted = arange - first
+        pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+    else:
+        # Position of each (token, k) inside its expert's queue.
+        oh = jax.nn.one_hot(flat_idx, cfg.num_experts, dtype=jnp.int32)
+        pos = (jnp.cumsum(oh, axis=0) - 1)                # (T*K, E)
+        pos = jnp.take_along_axis(pos, flat_idx[:, None], axis=1)[:, 0]
+
+    cap = _capacity(cfg, t)
+    lid = flat_idx - e_lo                                  # local expert id
+    valid = (pos < cap) & (lid >= 0) & (lid < e_local)
+    slot = jnp.where(valid, lid * cap + pos, e_local * cap)  # OOB => dropped
+
+    if perf.enabled("moe_sort_dispatch"):
+        # Dispatch via an int32 slot->token index scatter + ONE bf16
+        # gather: no (T*K, D) token replication, no wide activation
+        # scatter (scatters promote bf16 on some backends; gathers don't).
+        src = jnp.full((e_local * cap + 1,), t, jnp.int32)
+        src = src.at[slot].set(
+            (jnp.arange(t * k, dtype=jnp.int32)) // k, mode="drop")
+        x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x.dtype)])
+        buf = jnp.take(x_pad, src[:-1], axis=0)
+    else:
+        # Dispatch: (E_loc * C, D) buffer, scattered (mode=drop for OOB).
+        x_rep = jnp.repeat(x_flat, k, axis=0)              # (T*K, D)
+        buf = jnp.zeros((e_local * cap, d), x.dtype)
+        buf = buf.at[slot].add(x_rep, mode="drop")
+    buf = buf.reshape(e_local, cap, d)
+
+    # Expert FFN on the local slab.
+    gate = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(x.dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(x.dtype))
+    h = activate(gate, up, cfg.activation)
+    y_buf = jnp.einsum("ecf,efd->ecd", h, w_down.astype(x.dtype))
+    y_buf = y_buf.reshape(e_local * cap, d)
+
+    # Combine: gather each (token, k) slot back, weight by gate.
+    pad = jnp.zeros((1, d), y_buf.dtype)
+    y_all = jnp.concatenate([y_buf, pad], axis=0)
+    gathered = jnp.take(y_all, jnp.where(valid, slot, e_local * cap), axis=0)
+    y = (gathered.reshape(t, k, d) *
+         gates.reshape(t, k, 1).astype(y_buf.dtype)).sum(axis=1)
+    return y.reshape(b, s, d), aux
+
+
+def moe_block(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+              ctx: ShardCtx) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) -> (y, aux_loss).  p: router (D, E), w_gate/w_up
+    (E, D, F), w_down (E, F, D)."""
+    if ctx.mesh is None:
+        return _moe_compute(cfg, p, x, jnp.int32(0), cfg.num_experts,
+                            p["w_gate"], p["w_up"], p["w_down"])
+
+    mesh = ctx.mesh
+    ep_axes = ctx.axes("expert") or ()
+    batch_axes = ctx.axes("batch") or ()
+    ep_size = 1
+    for a in ep_axes:
+        ep_size *= mesh.shape[a]
+    if cfg.num_experts % ep_size:
+        raise ValueError(
+            f"num_experts={cfg.num_experts} not divisible by EP={ep_size}")
+    e_local = cfg.num_experts // ep_size
+
+    x_spec = P(batch_axes if batch_axes else None, None, None)
+    ew_spec = P(ep_axes, None, None)
+
+    def inner(x_loc, router, wg, wu, wd):
+        e_lo = jnp.int32(0)
+        for a in ep_axes:
+            e_lo = e_lo * mesh.shape[a] + jax.lax.axis_index(a)
+        e_lo = e_lo * e_local
+        y, aux = _moe_compute(cfg, {"router": router}, x_loc, e_lo, e_local,
+                              wg, wu, wd)
+        y = jax.lax.psum(y, ep_axes)
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return y, aux
+
+    y, aux = shard_map(
+        inner, mesh=mesh,
+        in_specs=(x_spec, P(None, None), ew_spec, ew_spec, ew_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return y, aux

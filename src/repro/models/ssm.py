@@ -1,0 +1,144 @@
+"""Mamba-2 (SSD) block: gated state-space layer with depthwise conv
+frontend, head-parallel TP sharding, chunked-scan training/prefill and
+O(1)-state single-token decode.
+
+TP note: the reference implementation fuses z/x/B/C/dt into one
+in-projection; we keep them as separate weights so the z/x/dt columns
+shard over the model axis (heads) while the small B/C group projections
+stay replicated — same math and FLOPs, clean Megatron-style sharding
+(one psum, at the out-projection).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import ShardCtx, rms_norm
+
+
+def _conv_full(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv over the sequence.  x (B, S, C), w (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i: i + x.shape[1]].astype(jnp.float32) * \
+            w[i][None, None, :].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def ssm_block(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,  # (B, S, D)
+    ctx: ShardCtx,
+    *,
+    return_state: bool = False,
+):
+    """Full-sequence Mamba-2 block (train / prefill).  With
+    return_state=True also returns (conv_state (B, W-1, Di+2GN) of
+    pre-activation conv inputs, ssm_state (B, H, P, N)) for decode."""
+    bsz, s, _ = x.shape
+    di, g, n = cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state
+    h, hd = cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    xc = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+    bc = jnp.einsum("bsd,de->bse", x, p["wbc"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+    z = ctx.constrain(z, "batch", "seq", "mlp")
+    xc = ctx.constrain(xc, "batch", "seq", "mlp")
+    xc_raw, bc_raw = xc, bc  # pre-conv inputs (decode conv window)
+
+    xc = _conv_full(xc, p["conv_x_w"], p["conv_x_b"])
+    xc = ctx.constrain(xc, "batch", "seq", "mlp")
+    bc = _conv_full(bc, p["conv_bc_w"], p["conv_bc_b"])
+    b_mat, c_mat = jnp.split(bc, [g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))  # (B, S, H)
+    xh = xc.reshape(bsz, s, h, hd)
+    xh = ctx.constrain(xh, "batch", "seq", "ssm_heads", None)
+    bm = b_mat.reshape(bsz, s, g, n)
+    cm = c_mat.reshape(bsz, s, g, n)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # (H,)
+
+    y, h_fin = ops.ssd_scan(xh, dt.astype(xh.dtype), a, bm, cm)
+    y = y + xh * p["d_skip"].astype(jnp.float32).reshape(1, 1, h, 1).astype(y.dtype)
+    y = y.reshape(bsz, s, di)
+
+    from repro import perf
+    if perf.enabled("bf16_gate"):
+        # gate in compute dtype: avoids f32 activation/cotangent chains
+        # through the (B, S, Di) gating tensors (REPRO_PERF=bf16_gate)
+        gate = jax.nn.silu(z)
+    else:
+        gate = jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y * gate, p["norm_w"], eps=cfg.norm_eps)
+    y = ctx.constrain(y, "batch", "seq", "mlp")
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    out = ctx.constrain(out, "batch", "seq", "embed")
+    if not return_state:
+        return out
+    w = cfg.ssm_conv_width
+    conv_in = jnp.concatenate([xc_raw, bc_raw], axis=-1)
+    conv_in = jnp.pad(conv_in, ((0, 0), (w - 1, 0), (0, 0)))
+    conv_state = conv_in[:, -(w - 1):].astype(jnp.float32)
+    return out, conv_state, h_fin
+
+
+def ssm_decode(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jnp.ndarray,            # (B, 1, D)
+    conv_state: jnp.ndarray,   # (B, W-1, Di + 2*G*N)
+    ssm_state: jnp.ndarray,    # (B, H, P, N) f32
+    ctx: ShardCtx,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token decode: O(1) state update, no KV growth."""
+    bsz = x.shape[0]
+    di, g, n = cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state
+    h, hd = cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    xc0 = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))[:, 0]
+    bc0 = jnp.einsum("bsd,de->bse", x, p["wbc"].astype(x.dtype))[:, 0]
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))[:, 0]
+
+    conv_in = jnp.concatenate([xc0, bc0], axis=-1)          # (B, C)
+    window = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)
+    new_conv_state = window[:, 1:]
+    w_cat = jnp.concatenate(
+        [p["conv_x_w"], p["conv_bc_w"]], axis=1).astype(jnp.float32)
+    b_cat = jnp.concatenate(
+        [p["conv_x_b"], p["conv_bc_b"]], axis=0).astype(jnp.float32)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w_cat) + b_cat
+    conv_out = jax.nn.silu(conv_out)
+    xc, b_vec, c_vec = jnp.split(conv_out, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # (B, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])                          # (B, H)
+
+    xh = xc.reshape(bsz, h, hd)
+    rep = h // g
+    bv = jnp.repeat(b_vec.reshape(bsz, g, n), rep, axis=1)    # (B, H, N)
+    cv = jnp.repeat(c_vec.reshape(bsz, g, n), rep, axis=1)
+
+    upd = (dt[..., None] * xh)[..., :, None] * bv[..., None, :]  # (B,H,P,N)
+    new_state = decay[..., None, None] * ssm_state + upd
+    new_state = ctx.constrain(new_state, "batch", "ssm_heads", None, None)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cv)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_w"], eps=cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return ctx.constrain(out, "batch", "seq", "embed"), new_conv_state, new_state

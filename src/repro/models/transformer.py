@@ -1,0 +1,600 @@
+"""Architecture forward passes: train loss, prefill and single-token
+decode for all six families (dense / vlm / moe / ssm / hybrid / encdec),
+with scanned layer stacks, optional remat, and ShardCtx-driven GSPMD
+sharding."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    ShardCtx, activate, embed_lookup, gated, layer_norm, lm_logits, rms_norm,
+    softcap, xent_loss,
+)
+
+AUX_LOSS_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Sub-blocks
+# ---------------------------------------------------------------------------
+
+def _norm(cfg: ModelConfig, x, w):
+    return rms_norm(x, w, eps=cfg.norm_eps, plus_one=cfg.sandwich_norm)
+
+
+def mlp_block(cfg: ModelConfig, p: Dict, x: jnp.ndarray, ctx: ShardCtx):
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    up = ctx.constrain(up, "batch", "seq", "mlp")
+    if gated(cfg.activation):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        g = ctx.constrain(g, "batch", "seq", "mlp")
+        h = activate(g, up, cfg.activation)
+    else:
+        h = activate(up, None, cfg.activation)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    return ctx.constrain(y, "batch", "seq", "embed")
+
+
+def _dense_layer_fwd(cfg, p, x, pos, ctx, *, window: int, causal=True,
+                     kv_x=None, kv_pos=None):
+    h = _norm(cfg, x, p["ln1"])
+    a = attn_mod.attention(cfg, p, h, pos, ctx, causal=causal, window=window,
+                           kv_x=kv_x, kv_pos=kv_pos)
+    if cfg.sandwich_norm:
+        a = _norm(cfg, a, p["ln1_post"])
+    x = x + a
+    h = _norm(cfg, x, p["ln2"])
+    m = mlp_block(cfg, p, h, ctx)
+    if cfg.sandwich_norm:
+        m = _norm(cfg, m, p["ln2_post"])
+    return x + m
+
+
+def _moe_layer_fwd(cfg, p, x, pos, ctx):
+    h = _norm(cfg, x, p["ln1"])
+    x = x + attn_mod.attention(cfg, p, h, pos, ctx)
+    h = _norm(cfg, x, p["ln2"])
+    y, aux = moe_mod.moe_block(cfg, p, h, ctx)
+    return x + y, aux
+
+
+def _ssm_layer_fwd(cfg, p, x, ctx):
+    h = rms_norm(x, p["ln"], eps=cfg.norm_eps)
+    return x + ssm_mod.ssm_block(cfg, p, h, ctx)
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(remat)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence trunk (train / prefill), per family
+# ---------------------------------------------------------------------------
+
+def trunk(cfg: ModelConfig, params: Dict, x: jnp.ndarray, pos: jnp.ndarray,
+          ctx: ShardCtx, *, remat: str = "none",
+          enc_out: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token embeddings (B,S,D) -> final hidden states.  Returns
+    (hidden, aux_loss)."""
+    fam = cfg.family
+    lp = params["layers"]
+
+    if fam in ("dense", "vlm"):
+        if cfg.alt_local_global:
+            lp2 = jax.tree.map(
+                lambda a: a.reshape((a.shape[0] // 2, 2) + a.shape[1:]), lp)
+
+            def body(h, pl):
+                pa = jax.tree.map(lambda a: a[0], pl)
+                pb = jax.tree.map(lambda a: a[1], pl)
+                h = _dense_layer_fwd(cfg, pa, h, pos, ctx, window=cfg.attn_window)
+                h = _dense_layer_fwd(cfg, pb, h, pos, ctx, window=0)
+                return h, jnp.float32(0)
+
+            x, _ = jax.lax.scan(_maybe_remat(body, remat), x, lp2)
+        else:
+            def body(h, pl):
+                return _dense_layer_fwd(cfg, pl, h, pos, ctx, window=0), \
+                    jnp.float32(0)
+
+            x, _ = jax.lax.scan(_maybe_remat(body, remat), x, lp)
+        return x, jnp.float32(0)
+
+    if fam == "moe":
+        def body(h, pl):
+            h, aux = _moe_layer_fwd(cfg, pl, h, pos, ctx)
+            return h, aux
+
+        x, auxs = jax.lax.scan(_maybe_remat(body, remat), x, lp)
+        return x, jnp.mean(auxs) * AUX_LOSS_COEF
+
+    if fam == "ssm":
+        def body(h, pl):
+            return _ssm_layer_fwd(cfg, pl, h, ctx), jnp.float32(0)
+
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x, lp)
+        return x, jnp.float32(0)
+
+    if fam == "hybrid":
+        k = cfg.hybrid_attn_every
+        groups = cfg.num_layers // k
+        lp2 = jax.tree.map(
+            lambda a: a.reshape((groups, k) + a.shape[1:]), lp)
+        sp = params["shared_attn"]
+
+        def body(h, pl):
+            h = _dense_layer_fwd(cfg, sp, h, pos, ctx, window=0)
+
+            def inner(hh, pll):
+                return _ssm_layer_fwd(cfg, pll, hh, ctx), None
+
+            h, _ = jax.lax.scan(inner, h, pl)
+            return h, jnp.float32(0)
+
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x, lp2)
+        return x, jnp.float32(0)
+
+    if fam == "encdec":
+        assert enc_out is not None
+
+        # decoder layer: self-attn + cross-attn + mlp
+        def dec_body(h, pl):
+            hh = _norm(cfg, h, pl["ln1"])
+            h = h + attn_mod.attention(cfg, pl, hh, pos, ctx, causal=True)
+            hh = _norm(cfg, h, pl["ln_x"])
+            xp = {k2[1:]: v for k2, v in pl.items() if k2.startswith("x")}
+            enc_pos = jnp.broadcast_to(
+                jnp.arange(enc_out.shape[1])[None], enc_out.shape[:2])
+            h = h + attn_mod.attention(cfg, xp, hh, pos, ctx, causal=False,
+                                       kv_x=enc_out, kv_pos=enc_pos)
+            hh = _norm(cfg, h, pl["ln2"])
+            return h + mlp_block(cfg, pl, hh, ctx), None
+
+        x, _ = jax.lax.scan(_maybe_remat(dec_body, remat), x, lp)
+        return x, jnp.float32(0)
+
+    raise ValueError(fam)
+
+
+def encoder(cfg: ModelConfig, params: Dict, frames: jnp.ndarray,
+            ctx: ShardCtx, *, remat: str = "none") -> jnp.ndarray:
+    """Whisper-style encoder over precomputed frame embeddings."""
+    s = frames.shape[1]
+    x = frames + params["enc_pos"][:s][None].astype(frames.dtype)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], frames.shape[:2])
+
+    def body(h, pl):
+        return _dense_layer_fwd(cfg, pl, h, pos, ctx, window=0, causal=False), None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["enc_layers"])
+    return rms_norm(x, params["enc_final_norm"], eps=cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Public: train loss / full-sequence logits
+# ---------------------------------------------------------------------------
+
+def _embed_in(cfg: ModelConfig, params, tokens, ctx, dtype):
+    emb = params["embed"].astype(dtype)
+    return embed_lookup(emb, tokens, ctx, scale=cfg.scale_embed)
+
+
+def _head_out(cfg: ModelConfig, params, x, ctx):
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps,
+                 plus_one=cfg.sandwich_norm)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return lm_logits(x, head, ctx, cap=cfg.final_softcap)
+
+
+def forward_logits(cfg: ModelConfig, params: Dict, batch: Dict, ctx: ShardCtx,
+                   *, remat: str = "none") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence logits (training / prefill).  batch:
+    tokens (B,S) [+ pos (B,S,3) vlm] [+ frames (B,Senc,D) encdec]."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed_in(cfg, params, tokens, ctx, dtype)
+
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encoder(cfg, params, batch["frames"].astype(dtype), ctx,
+                          remat=remat)
+        x = x + params["dec_pos"][:s][None].astype(dtype)
+
+    if cfg.use_mrope:
+        pos = batch["pos"]
+    else:
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    h, aux = trunk(cfg, params, x, pos, ctx, remat=remat, enc_out=enc_out)
+    return _head_out(cfg, params, h, ctx), aux
+
+
+def train_loss(cfg: ModelConfig, params: Dict, batch: Dict, ctx: ShardCtx,
+               *, remat: str = "dots") -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward_logits(cfg, params, batch, ctx, remat=remat)
+    loss = xent_loss(logits, batch["labels"], real_vocab=cfg.vocab_size)
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+               dtype=jnp.bfloat16, abstract: bool = False,
+               kv_quant: bool = False) -> Dict:
+    """Decode cache pytree.  With abstract=True returns ShapeDtypeStructs
+    (dry-run).  kv_quant=True stores int8 KV + per-position f32 scales
+    (dense/vlm/moe families; halves cache HBM — serve/kvquant.py)."""
+    mk = (jax.ShapeDtypeStruct if abstract
+          else (lambda sh, dt: jnp.zeros(sh, dt)))
+    b = batch_size
+    cache: Dict[str, Any] = {"len": mk((), jnp.int32)}
+    fam = cfg.family
+    hkv, dh, L = cfg.padded_kv_heads, cfg.head_dim, cfg.num_layers
+
+    if fam in ("dense", "vlm", "moe"):
+        kv_dtype = jnp.int8 if kv_quant else dtype
+        cache["k"] = mk((L, b, hkv, max_seq, dh), kv_dtype)
+        cache["v"] = mk((L, b, hkv, max_seq, dh), kv_dtype)
+        if kv_quant:
+            cache["k_scale"] = mk((L, b, hkv, max_seq, 1), jnp.float32)
+            cache["v_scale"] = mk((L, b, hkv, max_seq, 1), jnp.float32)
+    elif fam == "ssm":
+        conv_c = cfg.ssm_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        cache["conv"] = mk((L, b, cfg.ssm_conv_width - 1, conv_c), jnp.float32)
+        cache["ssm"] = mk((L, b, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32)
+    elif fam == "hybrid":
+        conv_c = cfg.ssm_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        groups = cfg.num_layers // cfg.hybrid_attn_every
+        cache["conv"] = mk((L, b, cfg.ssm_conv_width - 1, conv_c), jnp.float32)
+        cache["ssm"] = mk((L, b, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32)
+        cache["k"] = mk((groups, b, hkv, max_seq, dh), dtype)
+        cache["v"] = mk((groups, b, hkv, max_seq, dh), dtype)
+    elif fam == "encdec":
+        cache["k"] = mk((L, b, hkv, max_seq, dh), dtype)
+        cache["v"] = mk((L, b, hkv, max_seq, dh), dtype)
+        cache["xk"] = mk((L, b, hkv, cfg.encoder_seq, dh), dtype)
+        cache["xv"] = mk((L, b, hkv, cfg.encoder_seq, dh), dtype)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, ctx: ShardCtx, *, seq_sharded: bool = False):
+    """PartitionSpec tree matching init_cache."""
+    from jax.sharding import PartitionSpec as P
+
+    batch = ctx.axes("batch")
+    kv = ctx.axes("kv_heads")
+    seq = ctx.axes("seq_shard") if seq_sharded else None
+    if seq and batch:
+        # guard against duplicate mesh axes (long-context decode shards
+        # the sequence on the axis normally used for batch)
+        batch = tuple(a for a in batch if a not in seq) or None
+
+    def kv_spec(n_heads):
+        heads = None
+        if kv is not None and ctx.mesh is not None and not seq_sharded:
+            size = 1
+            for a in kv:
+                size *= ctx.mesh.shape[a]
+            heads = kv if n_heads % size == 0 else None
+        return P(None, batch, heads, seq, None)
+
+    specs: Dict[str, Any] = {"len": P()}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe", "encdec", "hybrid"):
+        specs["k"] = kv_spec(cfg.padded_kv_heads)
+        specs["v"] = kv_spec(cfg.padded_kv_heads)
+    if fam == "encdec":
+        specs["xk"] = P(None, batch, None, None, None)
+        specs["xv"] = P(None, batch, None, None, None)
+    if fam in ("ssm", "hybrid"):
+        mlp = ctx.axes("mlp")
+        sh = ctx.axes("ssm_heads")
+        specs["conv"] = P(None, batch, None, mlp)
+        specs["ssm"] = P(None, batch, sh, None, None)
+    return specs
+
+
+def prefill_forward(cfg: ModelConfig, params: Dict, batch: Dict,
+                    ctx: ShardCtx, *, max_seq: Optional[int] = None,
+                    remat: str = "none") -> Tuple[jnp.ndarray, Dict]:
+    """Process a full prompt and RETURN THE DECODE CACHE.
+
+    batch: tokens (B, S) [+ pos/frames].  Returns (last-token logits
+    (B, Vp), cache ready for decode_step at position S).  ``max_seq``
+    reserves cache room beyond the prompt (defaults to S).
+    """
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = _embed_in(cfg, params, tokens, ctx, dtype)
+
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encoder(cfg, params, batch["frames"].astype(dtype), ctx,
+                          remat=remat)
+        x = x + params["dec_pos"][:s][None].astype(dtype)
+    if cfg.use_mrope:
+        pos = batch["pos"]
+    else:
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    fam = cfg.family
+    lp = params["layers"]
+    cache = {"len": jnp.int32(s)}
+
+    def pad_kv(kv):  # (.., B, Hkv, S, Dh) -> reserve max_seq
+        if max_seq == s:
+            return kv
+        widths = [(0, 0)] * kv.ndim
+        widths[-2] = (0, max_seq - s)
+        return jnp.pad(kv, widths)
+
+    def dense_attn_collect(p, h, window):
+        hh = _norm(cfg, h, p["ln1"])
+        a, kv = attn_mod.attention(cfg, p, hh, pos, ctx, window=window,
+                                   return_kv=True)
+        if cfg.sandwich_norm:
+            a = _norm(cfg, a, p["ln1_post"])
+        h = h + a
+        hh = _norm(cfg, h, p["ln2"])
+        if fam == "moe":
+            m, _ = moe_mod.moe_block(cfg, p, hh, ctx)
+        else:
+            m = mlp_block(cfg, p, hh, ctx)
+        if cfg.sandwich_norm:
+            m = _norm(cfg, m, p["ln2_post"])
+        return h + m, kv
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.alt_local_global:
+            lp2 = jax.tree.map(
+                lambda a: a.reshape((a.shape[0] // 2, 2) + a.shape[1:]), lp)
+
+            def body(h, pl):
+                pa = jax.tree.map(lambda a: a[0], pl)
+                pb = jax.tree.map(lambda a: a[1], pl)
+                h, kv1 = dense_attn_collect(pa, h, cfg.attn_window)
+                h, kv2 = dense_attn_collect(pb, h, 0)
+                return h, (jnp.stack([kv1[0], kv2[0]]),
+                           jnp.stack([kv1[1], kv2[1]]))
+
+            x, (ks, vs) = jax.lax.scan(_maybe_remat(body, remat), x, lp2)
+            ks = ks.reshape((-1,) + ks.shape[2:])
+            vs = vs.reshape((-1,) + vs.shape[2:])
+        else:
+            def body(h, pl):
+                h, kv = dense_attn_collect(pl, h, 0)
+                return h, kv
+
+            x, (ks, vs) = jax.lax.scan(_maybe_remat(body, remat), x, lp)
+        cache["k"], cache["v"] = pad_kv(ks.astype(dtype)), pad_kv(vs.astype(dtype))
+
+    elif fam == "ssm":
+        def body(h, pl):
+            hh = rms_norm(h, pl["ln"], eps=cfg.norm_eps)
+            y, conv_st, ssm_st = ssm_mod.ssm_block(cfg, pl, hh, ctx,
+                                                   return_state=True)
+            return h + y, (conv_st, ssm_st)
+
+        x, (conv, ssm_st) = jax.lax.scan(_maybe_remat(body, remat), x, lp)
+        cache["conv"], cache["ssm"] = conv, ssm_st
+
+    elif fam == "hybrid":
+        k = cfg.hybrid_attn_every
+        groups = cfg.num_layers // k
+        lp2 = jax.tree.map(lambda a: a.reshape((groups, k) + a.shape[1:]), lp)
+        sp = params["shared_attn"]
+
+        def body(h, pl):
+            hh = _norm(cfg, h, sp["ln1"])
+            a, kv = attn_mod.attention(cfg, sp, hh, pos, ctx, return_kv=True)
+            h = h + a
+            hh = _norm(cfg, h, sp["ln2"])
+            h = h + mlp_block(cfg, sp, hh, ctx)
+
+            def inner(hh2, pll):
+                hn = rms_norm(hh2, pll["ln"], eps=cfg.norm_eps)
+                y, conv_st, ssm_st = ssm_mod.ssm_block(cfg, pll, hn, ctx,
+                                                       return_state=True)
+                return hh2 + y, (conv_st, ssm_st)
+
+            h, (conv_g, ssm_g) = jax.lax.scan(inner, h, pl)
+            return h, (conv_g, ssm_g, kv[0], kv[1])
+
+        x, (conv, ssm_st, ks, vs) = jax.lax.scan(
+            _maybe_remat(body, remat), x, lp2)
+        cache["conv"] = conv.reshape((-1,) + conv.shape[2:])
+        cache["ssm"] = ssm_st.reshape((-1,) + ssm_st.shape[2:])
+        cache["k"], cache["v"] = pad_kv(ks.astype(dtype)), pad_kv(vs.astype(dtype))
+
+    elif fam == "encdec":
+        def body(h, pl):
+            hh = _norm(cfg, h, pl["ln1"])
+            a, kv = attn_mod.attention(cfg, pl, hh, pos, ctx, causal=True,
+                                       return_kv=True)
+            h = h + a
+            hh = _norm(cfg, h, pl["ln_x"])
+            xp = {k2[1:]: v for k2, v in pl.items() if k2.startswith("x")}
+            enc_pos = jnp.broadcast_to(
+                jnp.arange(enc_out.shape[1])[None], enc_out.shape[:2])
+            a, xkv = attn_mod.attention(cfg, xp, hh, pos, ctx, causal=False,
+                                        kv_x=enc_out, kv_pos=enc_pos,
+                                        return_kv=True)
+            h = h + a
+            hh = _norm(cfg, h, pl["ln2"])
+            return h + mlp_block(cfg, pl, hh, ctx), (kv, xkv)
+
+        x, (kv, xkv) = jax.lax.scan(_maybe_remat(body, remat), x, lp)
+        cache["k"], cache["v"] = pad_kv(kv[0].astype(dtype)), pad_kv(kv[1].astype(dtype))
+        cache["xk"], cache["xv"] = xkv[0].astype(dtype), xkv[1].astype(dtype)
+    else:
+        raise ValueError(fam)
+
+    logits = _head_out(cfg, params, x[:, -1:], ctx)[:, 0]
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict,
+                ctx: ShardCtx, *, seq_sharded: bool = False
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step.  batch: tokens (B, 1) [+ pos (B,1,3) vlm].
+    Returns (logits (B, Vp), new cache)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = _embed_in(cfg, params, tokens, ctx, dtype)
+    clen = cache["len"]
+    if cfg.use_mrope:
+        pos = batch["pos"]
+    else:
+        pos = jnp.broadcast_to(clen[None, None], (b, 1)).astype(jnp.int32)
+    if cfg.is_encdec:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], clen, 1, axis=0)[None].astype(dtype)
+
+    fam = cfg.family
+    lp = params["layers"]
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.alt_local_global:
+            is_local = (jnp.arange(cfg.num_layers) % 2) == 0
+        else:
+            is_local = jnp.zeros((cfg.num_layers,), bool)
+        quant = "k_scale" in cache
+
+        def body(h, xs):
+            if quant:
+                pl, k_l, v_l, ks_l, vs_l, loc = xs
+            else:
+                pl, k_l, v_l, loc = xs
+                ks_l = vs_l = None
+            hh = _norm(cfg, h, pl["ln1"])
+            win = jnp.where(loc, cfg.attn_window, 0)
+            res = attn_mod.decode_attention(
+                cfg, pl, hh, pos, k_l, v_l, clen, ctx,
+                window=win if cfg.alt_local_global else 0,
+                seq_sharded=seq_sharded, k_scale=ks_l, v_scale=vs_l)
+            if quant:
+                a, k_l, v_l, ks_l, vs_l = res
+            else:
+                a, k_l, v_l = res
+            if cfg.sandwich_norm:
+                a = _norm(cfg, a, pl["ln1_post"])
+            h = h + a
+            hh = _norm(cfg, h, pl["ln2"])
+            if fam == "moe":
+                m, _ = moe_mod.moe_block(cfg, pl, hh, ctx)
+            else:
+                m = mlp_block(cfg, pl, hh, ctx)
+            if cfg.sandwich_norm:
+                m = _norm(cfg, m, pl["ln2_post"])
+            out = (k_l, v_l, ks_l, vs_l) if quant else (k_l, v_l)
+            return h + m, out
+
+        if quant:
+            x, (new_k, new_v, new_ks, new_vs) = jax.lax.scan(
+                body, x, (lp, cache["k"], cache["v"], cache["k_scale"],
+                          cache["v_scale"], is_local))
+            new_cache.update(k=new_k, v=new_v, k_scale=new_ks,
+                             v_scale=new_vs)
+        else:
+            x, (new_k, new_v) = jax.lax.scan(
+                body, x, (lp, cache["k"], cache["v"], is_local))
+            new_cache.update(k=new_k, v=new_v)
+
+    elif fam == "ssm":
+        def body(h, xs):
+            pl, conv_l, ssm_l = xs
+            hh = rms_norm(h, pl["ln"], eps=cfg.norm_eps)
+            y, conv_l, ssm_l = ssm_mod.ssm_decode(cfg, pl, hh, conv_l, ssm_l, ctx)
+            return h + y, (conv_l, ssm_l)
+
+        x, (new_conv, new_ssm) = jax.lax.scan(
+            body, x, (lp, cache["conv"], cache["ssm"]))
+        new_cache.update(conv=new_conv, ssm=new_ssm)
+
+    elif fam == "hybrid":
+        k = cfg.hybrid_attn_every
+        groups = cfg.num_layers // k
+        lp2 = jax.tree.map(lambda a: a.reshape((groups, k) + a.shape[1:]), lp)
+        conv2 = cache["conv"].reshape((groups, k) + cache["conv"].shape[1:])
+        ssm2 = cache["ssm"].reshape((groups, k) + cache["ssm"].shape[1:])
+        sp = params["shared_attn"]
+
+        def body(h, xs):
+            pl, conv_g, ssm_g, k_g, v_g = xs
+            hh = _norm(cfg, h, sp["ln1"])
+            a, k_g, v_g = attn_mod.decode_attention(
+                cfg, sp, hh, pos, k_g, v_g, clen, ctx, seq_sharded=seq_sharded)
+            h = h + a
+            hh = _norm(cfg, h, sp["ln2"])
+            h = h + mlp_block(cfg, sp, hh, ctx)
+
+            def inner(hh2, xs2):
+                pll, conv_l, ssm_l = xs2
+                hn = rms_norm(hh2, pll["ln"], eps=cfg.norm_eps)
+                y, conv_l, ssm_l = ssm_mod.ssm_decode(
+                    cfg, pll, hn, conv_l, ssm_l, ctx)
+                return hh2 + y, (conv_l, ssm_l)
+
+            h, (conv_g, ssm_g) = jax.lax.scan(inner, h, (pl, conv_g, ssm_g))
+            return h, (conv_g, ssm_g, k_g, v_g)
+
+        x, (nc, ns, nk, nv) = jax.lax.scan(
+            body, x, (lp2, conv2, ssm2, cache["k"], cache["v"]))
+        new_cache.update(
+            conv=nc.reshape(cache["conv"].shape),
+            ssm=ns.reshape(cache["ssm"].shape), k=nk, v=nv)
+
+    elif fam == "encdec":
+        def body(h, xs):
+            pl, k_l, v_l, xk_l, xv_l = xs
+            hh = _norm(cfg, h, pl["ln1"])
+            a, k_l, v_l = attn_mod.decode_attention(
+                cfg, pl, hh, pos, k_l, v_l, clen, ctx, seq_sharded=seq_sharded)
+            h = h + a
+            hh = _norm(cfg, h, pl["ln_x"])
+            xp = {k2[1:]: v for k2, v in pl.items() if k2.startswith("x")}
+            enc_len = jnp.int32(cfg.encoder_seq - 1)
+            a, _, _ = attn_mod.decode_attention(
+                cfg, xp, hh, pos, xk_l, xv_l, enc_len, ctx, update_cache=False)
+            h = h + a
+            hh = _norm(cfg, h, pl["ln2"])
+            return h + mlp_block(cfg, pl, hh, ctx), (k_l, v_l)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (lp, cache["k"], cache["v"], cache["xk"], cache["xv"]))
+        new_cache.update(k=new_k, v=new_v)
+    else:
+        raise ValueError(fam)
+
+    new_cache["len"] = clen + 1
+    logits = _head_out(cfg, params, x, ctx)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,102 @@
+"""AdamW with ZeRO-1 sharded moments and optional update hooks
+(gradient clipping, Ranky-GaLore low-rank projection).
+
+Pure-pytree implementation (no optax dependency): state = {m, v, step}.
+Moments are f32 and carry additional sharding over the ``opt_shard``
+(data) axis on top of the parameter's TP sharding — each data rank owns
+a slice of the moments, which is what bounds optimizer memory at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree.map(jnp.copy, zeros),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(params) -> Dict[str, Any]:
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree.map(lambda z: z, zeros),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def apply_updates(
+    cfg: AdamWConfig,
+    params,
+    grads,
+    state: Dict[str, Any],
+    *,
+    lr_scale: jnp.ndarray | float = 1.0,
+    transform: Optional[Callable] = None,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step.  ``transform(path, g) -> g`` lets compression hooks
+    (GaLore) rewrite per-parameter gradients before the moment update."""
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    if transform is not None:
+        grads = transform(grads)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - cfg.lr * lr_scale * delta
+        return new_p.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gn}

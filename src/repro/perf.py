@@ -1,0 +1,48 @@
+"""Performance feature flags (the §Perf hillclimb knobs).
+
+Each beyond-baseline optimization is individually switchable so every
+hillclimb iteration in EXPERIMENTS.md §Perf is A/B-reproducible:
+
+    REPRO_PERF=flash_vjp,ssd_chunked PYTHONPATH=src python -m ...
+
+Flags:
+  flash_vjp    — custom-VJP flash attention: backward recomputes scores
+                 per KV chunk instead of saving the (chunks, B, H, Sq,
+                 block_k) probability tensors (mirrors the Pallas
+                 kernel's recompute semantics).
+  ssd_chunked  — chunked SSD reference path: lax.scan over 128-wide
+                 chunks (saves per-chunk states) instead of per-timestep
+                 recurrence (saves per-step states) — the pure-jnp twin
+                 of kernels/ssd_scan.py.
+  decode_pet   — decode attention contracts bf16 KV with
+                 preferred_element_type=f32 instead of materializing f32
+                 copies of the cache.
+  local_kv_update — seq-sharded decode writes the new KV entry with a
+                 masked in-place update instead of a gather-prone
+                 dynamic_update_slice at a traced index.
+  moe_sort_dispatch — position-in-expert via stable sort on 1-D arrays
+                 instead of the (T*K, E) one-hot cumsum.
+"""
+from __future__ import annotations
+
+import os
+from typing import FrozenSet
+
+_ALL = frozenset({"flash_vjp", "ssd_chunked", "decode_pet",
+                  "local_kv_update", "moe_sort_dispatch", "bf16_gate"})
+
+
+def flags() -> FrozenSet[str]:
+    raw = os.environ.get("REPRO_PERF", "")
+    if raw.strip().lower() == "all":
+        return _ALL
+    out = frozenset(f.strip() for f in raw.split(",") if f.strip())
+    unknown = out - _ALL
+    if unknown:
+        raise ValueError(f"unknown REPRO_PERF flags {sorted(unknown)}; "
+                         f"valid: {sorted(_ALL)}")
+    return out
+
+
+def enabled(name: str) -> bool:
+    return name in flags()

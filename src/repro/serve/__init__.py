@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeConfig, generate, prefill_cache  # noqa: F401

@@ -1,0 +1,102 @@
+"""Serving engine: batched request handling over the decode_step.
+
+Prompt processing feeds the prompt through a lax.scan of decode steps
+(universal across all six families — attention fills KV, SSM folds into
+state); generation continues with temperature/greedy sampling.  Batched
+requests of uneven lengths are left-padded and masked via per-sequence
+prompt lengths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ShardCtx
+from repro.models.transformer import decode_step, encoder, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 512
+    temperature: float = 0.0   # 0 => greedy
+    seed: int = 0
+
+
+def _mrope_pos(b: int, t) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.asarray(t)[..., None, None, None],
+                            (b, 1, 3)).astype(jnp.int32)
+
+
+def prefill_cache(cfg: ModelConfig, params, prompts: jnp.ndarray,
+                  ctx: ShardCtx, scfg: ServeConfig,
+                  frames: Optional[jnp.ndarray] = None):
+    """Feed the prompt tokens (B, P) through scanned decode steps.
+    Returns (cache, last_logits)."""
+    b, plen = prompts.shape
+    cache = init_cache(cfg, b, scfg.max_seq,
+                       dtype=jnp.bfloat16 if cfg.dtype == "bfloat16"
+                       else jnp.float32)
+    if cfg.is_encdec:
+        assert frames is not None
+        enc_out = encoder(cfg, params, frames, ctx)
+        cache["xk"] = jnp.einsum("bsd,ldhk->lbhsk", enc_out,
+                                 params["layers"]["xwk"]).astype(cache["xk"].dtype)
+        cache["xv"] = jnp.einsum("bsd,ldhk->lbhsk", enc_out,
+                                 params["layers"]["xwv"]).astype(cache["xv"].dtype)
+
+    def body(cache, tok):
+        batch = {"tokens": tok[:, None]}
+        if cfg.use_mrope:
+            batch["pos"] = _mrope_pos(b, cache["len"])
+        logits, cache = decode_step(cfg, params, cache, batch, ctx)
+        return cache, logits
+
+    cache, logits = jax.lax.scan(body, cache, prompts.T)
+    return cache, logits[-1]
+
+
+def generate(cfg: ModelConfig, params, prompts: jnp.ndarray,
+             ctx: ShardCtx, scfg: ServeConfig, num_tokens: int
+             ) -> jnp.ndarray:
+    """Greedy/temperature generation.  prompts (B, P) -> (B, num_tokens)."""
+    b = prompts.shape[0]
+    cache, logits = prefill_cache(cfg, params, prompts, ctx, scfg)
+    key = jax.random.PRNGKey(scfg.seed)
+
+    def sample(logits, key):
+        logits = logits[..., : cfg.vocab_size]
+        if scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def body(carry, _):
+        cache, logits, key = carry
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub)
+        batch = {"tokens": tok[:, None]}
+        if cfg.use_mrope:
+            batch["pos"] = _mrope_pos(b, cache["len"])
+        logits, cache = decode_step(cfg, params, cache, batch, ctx)
+        return (cache, logits, key), tok
+
+    (_, _, _), toks = jax.lax.scan(
+        body, (cache, logits, key), None, length=num_tokens)
+    return toks.T  # (B, num_tokens)
+
+
+def batch_requests(prompt_lists: List[List[int]], pad_id: int = 0
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Left-pad uneven requests into one batch (B, Pmax) + lengths."""
+    lens = np.asarray([len(p) for p in prompt_lists])
+    pmax = int(lens.max())
+    out = np.full((len(prompt_lists), pmax), pad_id, np.int32)
+    for i, p in enumerate(prompt_lists):
+        out[i, pmax - len(p):] = p
+    return out, lens

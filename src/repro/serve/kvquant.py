@@ -1,0 +1,47 @@
+"""Int8 KV-cache quantization.
+
+EXPERIMENTS.md §Dry-run flags decode_32k cells whose bf16 KV caches
+exceed HBM (gemma2-9b: 282 GB/chip at the assigned batch).  Per-position
+symmetric int8 quantization halves that and keeps the attention math
+exact up to the per-position scale:
+
+    k_q[s] = round(k[s] / scale_k[s] * 127),   scale_k[s] = amax|k[s]|/127
+    logits[s] = (q . k_q[s]) * scale_k[s]      (scale is scalar per s)
+    out = sum_s (p[s] * scale_v[s]) . v_q[s]
+
+so dequantization folds into the existing contractions — no
+materialized dequantized cache.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def quantize(kv: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(.., S, Dh) -> (int8 (.., S, Dh), f32 scales (.., S, 1))."""
+    amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def attend_q8(qg: jnp.ndarray, k_q: jnp.ndarray, k_scale: jnp.ndarray
+              ) -> jnp.ndarray:
+    """Decode logits against an int8 K cache.
+    qg (B, Hkv, G, Dh) f32; k_q (B, Hkv, S, Dh) int8; k_scale (B,Hkv,S,1).
+    Returns (B, Hkv, G, S) f32."""
+    logits = jnp.einsum("bhgk,bhsk->bhgs", qg, k_q.astype(jnp.float32))
+    return logits * k_scale[..., 0][:, :, None, :]
+
+
+def combine_q8(probs: jnp.ndarray, v_q: jnp.ndarray, v_scale: jnp.ndarray
+               ) -> jnp.ndarray:
+    """probs (B, Hkv, G, S) f32 x int8 V cache -> (B, Hkv, G, Dh) f32."""
+    p_scaled = probs * v_scale[..., 0][:, :, None, :]
+    return jnp.einsum("bhgs,bhsk->bhgk", p_scaled, v_q.astype(jnp.float32))

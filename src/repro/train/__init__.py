@@ -1,0 +1,4 @@
+from repro.train.step import (  # noqa: F401
+    TrainConfig, abstract_train_state, init_train_state, make_train_step,
+    state_shardings,
+)

@@ -1,0 +1,83 @@
+"""The training loop: jitted step with explicit shardings, periodic async
+checkpoints, straggler monitoring, failure recovery, metrics logging."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+
+from repro.checkpoint.ckpt import Checkpointer, tree_signature
+from repro.configs.base import ModelConfig
+from repro.data import tokens as data_mod
+from repro.ft.straggler import StragglerConfig, StragglerMonitor
+from repro.models.io import batch_specs
+from repro.models.layers import ShardCtx
+from repro.train.step import TrainConfig, init_train_state, make_train_step, \
+    state_shardings
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    resume: bool = True
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig, lcfg: LoopConfig,
+          ctx: ShardCtx, data_cfg: data_mod.DataConfig,
+          *, log: Callable[[str], None] = print,
+          state: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Run the loop; returns the final state.  Restores from the latest
+    checkpoint when lcfg.resume and one exists."""
+    step_fn = make_train_step(cfg, tcfg, ctx)
+    st_sh = state_shardings(cfg, tcfg, ctx)
+
+    ckpt = Checkpointer(lcfg.ckpt_dir) if lcfg.ckpt_dir else None
+    start_step = 0
+    if state is None:
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        if ckpt and lcfg.resume and ckpt.latest_step() is not None:
+            state, meta = ckpt.restore(
+                shardings=st_sh, expect_signature=tree_signature(state))
+            start_step = meta["step"]
+            log(f"resumed from step {start_step}")
+        elif st_sh is not None:
+            state = jax.device_put(state, st_sh)
+
+    if ctx.mesh is not None:
+        bspec = batch_specs(cfg, ctx, kind="train")
+        from jax.sharding import NamedSharding
+        b_sh = jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), bspec,
+                            is_leaf=lambda x: hasattr(x, "_partitions")
+                            or type(x).__name__ == "PartitionSpec")
+        jit_step = jax.jit(step_fn, in_shardings=(st_sh, b_sh),
+                           out_shardings=(st_sh, None), donate_argnums=(0,))
+    else:
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    monitor = StragglerMonitor(StragglerConfig(), jax.process_count())
+
+    it = data_mod.iterate(data_cfg, start_step)
+    metrics = {}
+    for step in range(start_step, lcfg.steps):
+        host_batch = next(it)
+        batch = data_mod.shard_batch(host_batch, ctx.mesh)
+        t0 = time.perf_counter()
+        state, metrics = jit_step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        monitor.observe({jax.process_index(): dt})
+
+        if step % lcfg.log_every == 0 or step == lcfg.steps - 1:
+            log(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+        if ckpt and ((step + 1) % lcfg.ckpt_every == 0
+                     or step == lcfg.steps - 1):
+            ckpt.save(step + 1, state)
+    if ckpt:
+        ckpt.wait()
+    return state

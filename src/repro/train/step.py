@@ -1,0 +1,167 @@
+"""Training step factory: loss + grad (with microbatched accumulation),
+optimizer update (AdamW or Ranky-GaLore), LR schedule — one jittable
+function with explicit in/out shardings for the production mesh."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression import galore as galore_mod
+from repro.configs.base import ModelConfig
+from repro.models.layers import ShardCtx
+from repro.models.transformer import train_loss
+from repro.optim import adamw, schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"          # "adamw" | "galore"
+    remat: str = "dots"               # "none" | "dots" | "full"
+    microbatches: int = 1             # grad-accumulation steps
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    adamw: adamw.AdamWConfig = adamw.AdamWConfig()
+    galore: galore_mod.GaloreConfig = galore_mod.GaloreConfig()
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> Dict[str, Any]:
+    from repro.models.schema import init_params
+
+    params = init_params(cfg, key)
+    if tcfg.optimizer == "galore":
+        opt = galore_mod.init_state(params, tcfg.galore)
+    else:
+        opt = adamw.init_state(params)
+    return {"params": params, "opt": opt, "rng": jax.random.PRNGKey(1)}
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig) -> Dict[str, Any]:
+    from repro.models.schema import abstract_params
+
+    params = abstract_params(cfg)
+    if tcfg.optimizer == "galore":
+        real = jax.eval_shape(
+            lambda p: galore_mod.init_state(p, tcfg.galore), params)
+        opt = real
+    else:
+        opt = adamw.abstract_state(params)
+    return {"params": params, "opt": opt,
+            "rng": jax.ShapeDtypeStruct((2,), jnp.uint32)}
+
+
+def _grads(cfg, tcfg, params, batch, ctx):
+    """Loss + grads, microbatched if configured (f32 accumulation)."""
+
+    def loss_fn(p, b):
+        return train_loss(cfg, p, b, ctx, remat=tcfg.remat)
+
+    if tcfg.microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    n = tcfg.microbatches
+
+    def split(x):
+        b = x.shape[0]
+        return x.reshape((n, b // n) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        acc, lsum = carry
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc, g)
+        return (acc, lsum + loss), None
+
+    (grads, lsum), _ = jax.lax.scan(body, (zero, jnp.float32(0)), micro)
+    grads = jax.tree.map(lambda g: g / n, grads)
+    loss = lsum / n
+    return loss, {"loss": loss, "aux_loss": jnp.float32(0)}, grads
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx
+                    ) -> Callable:
+    """Returns step(state, batch) -> (state, metrics).  Jit it with the
+    shardings from state_shardings()/io.batch_specs."""
+
+    def step(state, batch):
+        params = state["params"]
+        loss, metrics, grads = _grads(cfg, tcfg, params, batch, ctx)
+        opt = state["opt"]
+        stepno = opt["step"]
+        lr_scale = schedule.warmup_cosine(
+            stepno, warmup=tcfg.warmup_steps, total=tcfg.total_steps)
+
+        if tcfg.optimizer == "galore":
+            rng, sub = jax.random.split(state["rng"])
+            new_params, new_opt, om = galore_mod.apply_updates(
+                tcfg.adamw, tcfg.galore, params, grads, opt,
+                lr_scale=lr_scale, key=sub)
+            new_state = {"params": new_params, "opt": new_opt, "rng": rng}
+        else:
+            new_params, new_opt, om = adamw.apply_updates(
+                tcfg.adamw, params, grads, opt, lr_scale=lr_scale)
+            new_state = {"params": new_params, "opt": new_opt,
+                         "rng": state["rng"]}
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr_scale"] = lr_scale
+        return new_state, metrics
+
+    return step
+
+
+def state_shardings(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx):
+    """NamedShardings for the train state: params TP-sharded; moments
+    additionally ZeRO-sharded over the opt_shard (data) axis on their
+    largest divisible dim."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models.schema import param_specs
+
+    if ctx.mesh is None:
+        return None
+    pspecs = param_specs(cfg, ctx)
+    psh = jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+
+    opt_axes = ctx.axes("opt_shard")
+
+    def zero_shard(spec: P, leaf) -> NamedSharding:
+        """Add the ZeRO axis to the first dim that is unsharded and
+        divisible by the opt axis size."""
+        if not opt_axes:
+            return NamedSharding(ctx.mesh, spec)
+        size = 1
+        for a in opt_axes:
+            size *= ctx.mesh.shape[a]
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (ax, dim) in enumerate(zip(parts, leaf.shape)):
+            if ax is None and dim % size == 0:
+                parts[i] = opt_axes
+                break
+        return NamedSharding(ctx.mesh, P(*parts))
+
+    state = abstract_train_state(cfg, tcfg)
+
+    if tcfg.optimizer == "galore":
+        # galore leaves: dict with p/m/v per param leaf — projector p is
+        # replicated-ish, moments ZeRO-shard on their first divisible dim
+        opt_sh = {
+            "leaves": jax.tree.map(
+                lambda x: zero_shard(P(), x), state["opt"]["leaves"]),
+            "step": NamedSharding(ctx.mesh, P()),
+        }
+    else:
+        m_sh = jax.tree.map(
+            lambda sp, leaf: zero_shard(sp, leaf), pspecs,
+            state["opt"]["m"], is_leaf=lambda x: isinstance(x, P))
+        opt_sh = {"m": m_sh, "v": m_sh,
+                  "step": NamedSharding(ctx.mesh, P())}
+    return {"params": psh, "opt": opt_sh,
+            "rng": NamedSharding(ctx.mesh, P())}

@@ -1,0 +1,6 @@
+import os
+
+# Tests exercise kernels explicitly with interpret=True; everything else
+# (models, integration) uses the pure-jnp reference path so CPU tests are
+# fast and the device count stays 1 (the 512-device env var is dryrun-only).
+os.environ.setdefault("REPRO_KERNELS", "ref")

@@ -1,0 +1,150 @@
+"""Multi-device distributed tests.
+
+jax fixes the device count at first initialization, so these run in
+SUBPROCESSES with XLA_FLAGS forcing 8 host devices — the same mechanism
+the dry-run uses for 512.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str) -> str:
+    code = textwrap.dedent(body)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               REPRO_KERNELS="ref",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_distributed_ranky_matches_numpy():
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import sparse
+        from repro.core.distributed import distributed_ranky_svd
+        coo = sparse.ensure_full_row_rank(
+            sparse.random_bipartite(24, 2048, 0.004, seed=3))
+        a = sparse.pad_to_block_multiple(coo.todense(), 8)
+        s_true = np.linalg.svd(a, compute_uv=False)[:24]
+        mesh = jax.make_mesh((8,), ("model",))
+        for merge in ("proxy", "gram"):
+            u, s = distributed_ranky_svd(
+                jnp.asarray(a), mesh, block_axes=("model",),
+                method="none", merge_mode=merge)
+            err = float(np.abs(np.asarray(s) - s_true).sum())
+            assert err < 1e-2, (merge, err)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_distributed_hierarchical_two_level():
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import sparse
+        from repro.core.distributed import distributed_ranky_svd
+        coo = sparse.ensure_full_row_rank(
+            sparse.random_bipartite(16, 1024, 0.01, seed=1))
+        a = sparse.pad_to_block_multiple(coo.todense(), 8)
+        s_true = np.linalg.svd(a, compute_uv=False)[:16]
+        mesh = jax.make_mesh((2, 4), ("pod", "model"))
+        u, s, v = distributed_ranky_svd(
+            jnp.asarray(a), mesh, block_axes=("pod", "model"),
+            method="neighbor_random", merge_mode="proxy",
+            local_mode="svd", hierarchical=True, want_right=True)
+        # repair may perturb; compare against repaired spectrum indirectly:
+        # U orthonormal + consistent factorization
+        g = np.asarray(u).T @ np.asarray(u)
+        assert np.abs(g - np.eye(16)).max() < 1e-3
+        recon = np.asarray(u) * np.asarray(s) @ np.asarray(v).T
+        s2 = np.linalg.svd(recon, compute_uv=False)
+        assert np.abs(s2 - np.asarray(s)).sum() < 1e-2
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_train_step_runs_and_matches_single():
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs.base import get_smoke_config
+        from repro.data import tokens as data_mod
+        from repro.models.layers import ShardCtx
+        from repro.train.step import (TrainConfig, init_train_state,
+                                      make_train_step, state_shardings)
+        from repro.models.io import batch_specs
+        from jax.sharding import NamedSharding
+
+        cfg = get_smoke_config("phi4-mini-3.8b")
+        import dataclasses
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        tcfg = TrainConfig(remat="none")
+        dcfg = data_mod.DataConfig(cfg.vocab_size, 32, 8)
+        host = data_mod.batch_at(dcfg, 0)
+
+        # single device
+        ctx0 = ShardCtx()
+        s0 = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step0 = jax.jit(make_train_step(cfg, tcfg, ctx0))
+        s0, m0 = step0(s0, data_mod.shard_batch(host, None))
+
+        # 4x2 mesh
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        ctx = ShardCtx(mesh=mesh)
+        st_sh = state_shardings(cfg, tcfg, ctx)
+        s1 = jax.device_put(
+            init_train_state(cfg, tcfg, jax.random.PRNGKey(0)), st_sh)
+        b_sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                            batch_specs(cfg, ctx, kind="train"),
+                            is_leaf=lambda x: not isinstance(x, dict))
+        step1 = jax.jit(make_train_step(cfg, tcfg, ctx),
+                        in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None))
+        s1, m1 = step1(s1, data_mod.shard_batch(host, mesh,
+                                                batch_axes=("data",)))
+        assert abs(float(m0["loss"]) - float(m1["loss"])) < 1e-4, \
+            (float(m0["loss"]), float(m1["loss"]))
+        # parameters evolve identically
+        for a, b in zip(jax.tree.leaves(s0["params"]),
+                        jax.tree.leaves(s1["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-5)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_moe_decode_matches_single():
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp, dataclasses
+        from repro.configs.base import get_smoke_config
+        from repro.models import decode_step, init_cache, init_params
+        from repro.models.layers import ShardCtx
+        from repro.models.schema import param_shardings
+
+        cfg = dataclasses.replace(get_smoke_config("phi3.5-moe-42b-a6.6b"),
+                                  dtype="float32", capacity_factor=8.0)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        cache = init_cache(cfg, 4, 16, dtype=jnp.float32)
+        batch = {"tokens": jnp.ones((4, 1), jnp.int32)}
+        l0, _ = decode_step(cfg, params, cache, batch, ShardCtx())
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        ctx = ShardCtx(mesh=mesh)
+        p_sh = param_shardings(cfg, ctx)
+        params_s = jax.device_put(params, p_sh)
+        l1, _ = jax.jit(lambda p, c, b: decode_step(cfg, p, c, b, ctx))(
+            params_s, init_cache(cfg, 4, 16, dtype=jnp.float32), batch)
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                                   rtol=1e-3, atol=1e-3)
+        print("OK")
+    """)
+    assert "OK" in out

@@ -1,0 +1,154 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels import blockgram as bg
+from repro.kernels import flash_attention as fa
+from repro.kernels import ssd_scan as ssd
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return (3e-2, 1e-1) if dtype == jnp.bfloat16 else (2e-5, 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# blockgram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [8, 64, 128])
+@pytest.mark.parametrize("n", [256, 1024])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_blockgram_sweep(m, n, dtype):
+    x = jax.random.normal(KEY, (m, n), dtype)
+    got = bg.blockgram(x, block_n=256, interpret=True)
+    want = ref.blockgram(x)
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol * n / 100)
+
+
+def test_blockgram_ops_padding():
+    # M not 8-aligned, N not block-aligned -> ops pads losslessly.
+    x = jax.random.normal(KEY, (13, 300), jnp.float32)
+    got = ops.blockgram(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.blockgram(x)),
+                               rtol=1e-5, atol=1e-3)
+    assert got.shape == (13, 13)
+
+
+def test_blockgram_sparse_zeros():
+    x = jnp.zeros((16, 512), jnp.float32)
+    got = bg.blockgram(x, block_n=256, interpret=True)
+    assert np.all(np.asarray(got) == 0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,d",
+    [
+        (2, 4, 2, 128, 128, 64),
+        (1, 8, 1, 64, 64, 128),   # MQA
+        (1, 4, 4, 256, 256, 32),  # MHA
+        (2, 4, 2, 64, 192, 64),   # cross/right-aligned (sq < sk)
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hq, hkv, sq, sk, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, d), dtype)
+    got = fa.flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention(q, k, v)
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=rtol, atol=atol
+    )
+
+
+@pytest.mark.parametrize("window", [0, 96])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_variants(window, softcap, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    got = fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=64, block_k=64, interpret=True,
+    )
+    want = ref.flash_attention(q, k, v, causal=causal, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-4)
+
+
+def test_chunked_flash_matches_oracle():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 512, 64), jnp.float32)
+    got = ref.chunked_flash_attention(q, k, v, block_k=128)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-4)
+
+
+def test_flash_ops_unaligned_padding():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 100, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 100, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 100, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "b,l,h,g,p,n,chunk",
+    [
+        (2, 128, 4, 2, 32, 16, 64),
+        (1, 256, 2, 2, 64, 32, 128),
+        (1, 64, 4, 1, 16, 8, 32),   # MVA-style shared B/C
+        (1, 128, 8, 8, 64, 64, 64),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(b, l, h, g, p, n, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p), dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))) * 0.1).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = (jax.random.normal(ks[3], (b, l, g, n)) / np.sqrt(n)).astype(dtype)
+    cm = (jax.random.normal(ks[4], (b, l, g, n)) / np.sqrt(n)).astype(dtype)
+    y, hf = ssd.ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    yr, hr = ref.ssd_scan(x, dt, a, bm, cm, return_state=True)
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32), rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), rtol=rtol, atol=atol)
+
+
+def test_ssd_state_decays():
+    # With strongly negative A and long sequence the state forgets the past:
+    # final state ~ function of the recent tokens only.
+    b, l, h, g, p, n = 1, 128, 2, 1, 16, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jnp.ones((b, l, h)) * 2.0
+    a = jnp.full((h,), -10.0)
+    bm = jax.random.normal(ks[3], (b, l, g, n))
+    cm = jax.random.normal(ks[4], (b, l, g, n))
+    _, hf = ssd.ssd_scan(x, dt, a, bm, cm, chunk=64, interpret=True)
+    x2 = x.at[:, : l // 2].set(jax.random.normal(ks[2], (b, l // 2, h, p)))
+    _, hf2 = ssd.ssd_scan(x2, dt, a, bm, cm, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hf2), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,76 @@
+"""Int8 KV-cache quantization tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models import decode_step, init_cache, init_params
+from repro.models.layers import ShardCtx
+from repro.serve import kvquant
+
+KEY = jax.random.PRNGKey(0)
+CTX = ShardCtx()
+
+
+def test_quantize_roundtrip():
+    kv = jax.random.normal(KEY, (2, 4, 16, 64)) * 3.0
+    q, s = kvquant.quantize(kv)
+    assert q.dtype == jnp.int8 and s.shape == (2, 4, 16, 1)
+    deq = kvquant.dequantize(q, s)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(kv),
+                               atol=float(jnp.max(jnp.abs(kv))) / 100)
+
+
+def test_attend_matches_dequantized():
+    ks = jax.random.split(KEY, 3)
+    qg = jax.random.normal(ks[0], (2, 2, 4, 32))
+    k = jax.random.normal(ks[1], (2, 2, 16, 32))
+    kq, ksc = kvquant.quantize(k)
+    got = kvquant.attend_q8(qg, kq, ksc)
+    want = jnp.einsum("bhgk,bhsk->bhgs", qg, kvquant.dequantize(kq, ksc))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "gemma2-9b",
+                                  "phi3.5-moe-42b-a6.6b"])
+def test_int8_decode_close_to_bf16(arch):
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32",
+                              capacity_factor=8.0)
+    params = init_params(cfg, KEY)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 6)), jnp.int32)
+
+    def run(kv_quant):
+        cache = init_cache(cfg, 2, 8, dtype=jnp.float32, kv_quant=kv_quant)
+        outs = []
+        for t in range(6):
+            lg, cache = decode_step(cfg, params, cache,
+                                    {"tokens": toks[:, t:t + 1]}, CTX)
+            outs.append(lg)
+        return np.asarray(jnp.stack(outs, 1), np.float32), cache
+
+    full, _ = run(False)
+    q8, cache = run(True)
+    assert cache["k"].dtype == jnp.int8
+    # logits agree to int8 attention accuracy
+    np.testing.assert_allclose(q8, full, rtol=0.1, atol=0.15)
+    # and the argmax (greedy token) almost always agrees
+    agree = (q8.argmax(-1) == full.argmax(-1)).mean()
+    assert agree >= 0.9, agree
+
+
+def test_cache_memory_halved():
+    cfg = get_smoke_config("phi4-mini-3.8b")
+    c16 = init_cache(cfg, 2, 128, abstract=True)
+    c8 = init_cache(cfg, 2, 128, abstract=True, kv_quant=True)
+
+    def nbytes(c):
+        return sum(np.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(c))
+
+    # smoke config head_dim=16 -> per-position scale overhead f32/16 = 25%;
+    # production head_dim=128 gives ~0.52x
+    assert nbytes(c8) < 0.7 * nbytes(c16)

@@ -1,0 +1,179 @@
+"""Launch-layer units: HLO cost walker, roofline math, input specs,
+production-mesh shapes (validated via the elastic planner without
+touching jax device state)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, cells, get_config, \
+    get_smoke_config
+from repro.launch import hlocost, roofline
+from repro.models.io import input_specs, train_batch
+from repro.models.layers import ShardCtx
+from repro.models.transformer import init_cache
+
+
+# ---------------------------------------------------------------------------
+# hlocost: trip-count-aware accounting
+# ---------------------------------------------------------------------------
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_hlocost_scan_trip_multiplication():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    cost = hlocost.analyze(_compile(f, x, w).as_text())
+    want = 2 * 128 * 256 * 256 * 10
+    assert want <= cost.flops <= want * 1.1
+
+
+def test_hlocost_nested_scans():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    cost = hlocost.analyze(_compile(f, x, w).as_text())
+    want = 2 * 64 ** 3 * 20
+    assert want <= cost.flops <= want * 1.2
+
+
+def test_hlocost_dus_inplace():
+    """Scan writing slices into a big buffer must cost ~slice traffic,
+    not the whole buffer per step."""
+    def f(x):
+        buf = jnp.zeros((64, 128, 128), jnp.float32)
+
+        def body(b, i):
+            return jax.lax.dynamic_update_slice(
+                b, (x * (i + 1.0))[None], (i, 0, 0)), None
+
+        buf, _ = jax.lax.scan(body, buf, jnp.arange(64))
+        return buf
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    cost = hlocost.analyze(_compile(f, x).as_text())
+    whole_buffer_per_step = 64 * (64 * 128 * 128 * 4) * 2
+    assert cost.bytes < 0.2 * whole_buffer_per_step
+
+
+def test_hlocost_shape_parse():
+    elems, nbytes = hlocost.shape_elems_bytes("f32[16,4096,4096]{2,1,0}")
+    assert elems == 16 * 4096 * 4096 and nbytes == elems * 4
+    elems, nbytes = hlocost.shape_elems_bytes(
+        "(bf16[8,4]{1,0}, s32[3])")
+    assert nbytes == 8 * 4 * 2 + 3 * 4
+
+
+# ---------------------------------------------------------------------------
+# roofline math
+# ---------------------------------------------------------------------------
+
+def test_roofline_terms_and_bottleneck():
+    r = roofline.Roofline(
+        arch="a", shape="train_4k", mesh="16x16", chips=256,
+        hlo_flops_per_chip=197e12,        # exactly 1 s of compute
+        hlo_bytes_per_chip=819e9 * 0.5,   # 0.5 s of HBM
+        collective_bytes_per_chip=50e9 * 2.0,  # 2 s of ICI
+        model_flops=197e12 * 256 * 0.5,
+    )
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(0.5)
+    assert r.t_collective == pytest.approx(2.0)
+    assert r.bottleneck == "collective"
+    assert r.useful_flop_ratio == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(0.25)
+
+
+def test_model_flops_kinds():
+    cfg = get_config("phi4-mini-3.8b")
+    tr = roofline.model_flops(cfg, SHAPES["train_4k"])
+    pf = roofline.model_flops(cfg, SHAPES["prefill_32k"])
+    dc = roofline.model_flops(cfg, SHAPES["decode_32k"])
+    assert tr == pytest.approx(6 * cfg.active_param_count() * 4096 * 256)
+    assert pf == pytest.approx(2 * cfg.active_param_count() * 32768 * 32)
+    assert dc == pytest.approx(2 * cfg.active_param_count() * 128)
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    f = roofline.model_flops(cfg, SHAPES["train_4k"])
+    assert f < 6 * cfg.param_count() * 4096 * 256 * 0.2  # active << total
+
+
+# ---------------------------------------------------------------------------
+# input specs / cells
+# ---------------------------------------------------------------------------
+
+def test_cells_assignment():
+    total = sum(len(cells(a)) for a in ARCH_IDS)
+    # 10 archs x 3 universal shapes + 2 sub-quadratic long_500k cells
+    assert total == 32
+    assert "long_500k" in cells("mamba2-1.3b")
+    assert "long_500k" in cells("zamba2-2.7b")
+    assert "long_500k" not in cells("gemma2-9b")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_abstract(arch):
+    cfg = get_config(arch)
+    ctx = ShardCtx()
+    for shape_name in cells(arch):
+        shape = SHAPES[shape_name]
+        args, shardings = input_specs(cfg, shape, ctx)
+        for leaf in jax.tree.leaves(args):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+        if shape.kind == "train":
+            assert args["batch"]["tokens"].shape == \
+                (shape.global_batch, shape.seq_len)
+        else:
+            assert "batch" in args
+
+
+def test_cache_abstract_matches_real():
+    cfg = get_smoke_config("zamba2-2.7b")
+    abs_c = init_cache(cfg, 2, 64, abstract=True)
+    real_c = init_cache(cfg, 2, 64)
+    for a, r in zip(jax.tree.leaves(abs_c), jax.tree.leaves(real_c)):
+        assert a.shape == r.shape and a.dtype == r.dtype
+
+
+# ---------------------------------------------------------------------------
+# production mesh geometry (via the planner; no device state)
+# ---------------------------------------------------------------------------
+
+def test_production_mesh_shapes():
+    from repro.ft.elastic import plan_mesh
+    p1 = plan_mesh(256, model_parallel=16, multi_pod_threshold=10**9)
+    assert p1.shape == (16, 16) and p1.axis_names == ("data", "model")
+    p2 = plan_mesh(512, model_parallel=16)
+    assert p2.shape == (2, 16, 16)
+    assert p2.axis_names == ("pod", "data", "model")
+
+
+def test_perf_flags_validate():
+    import repro.perf as perf
+    import os
+    os.environ["REPRO_PERF"] = "flash_vjp, ssd_chunked"
+    try:
+        assert perf.enabled("flash_vjp") and perf.enabled("ssd_chunked")
+        os.environ["REPRO_PERF"] = "bogus"
+        with pytest.raises(ValueError):
+            perf.flags()
+    finally:
+        os.environ["REPRO_PERF"] = ""

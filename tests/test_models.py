@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (
+    decode_step, forward_logits, init_cache, init_params, train_loss,
+)
+from repro.models.io import decode_batch, train_batch
+from repro.models.layers import ShardCtx
+
+CTX = ShardCtx()
+KEY = jax.random.PRNGKey(0)
+
+
+def _real_batch(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = train_batch(cfg, b, s)
+    batch["tokens"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    batch["labels"] = batch["tokens"]
+    if "pos" in batch:
+        batch["pos"] = jnp.broadcast_to(
+            jnp.arange(s)[None, :, None], (b, s, 3)).astype(jnp.int32)
+    if "frames" in batch:
+        batch["frames"] = jax.random.normal(
+            KEY, batch["frames"].shape, jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    """One forward/loss step on the reduced config: shapes + finite."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    batch = _real_batch(cfg, 2, 32)
+    loss, metrics = train_loss(cfg, params, batch, CTX, remat="none")
+    assert np.isfinite(float(loss))
+    logits, _ = forward_logits(cfg, params, batch, CTX)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_grads_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    batch = _real_batch(cfg, 2, 16)
+    grads = jax.grad(
+        lambda p: train_loss(cfg, p, batch, CTX, remat="none")[0])(params)
+    for leaf in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    """Sequential decode with cache == full forward (teacher forcing).
+    MoE uses a no-drop capacity factor (dropping differs by batch size)."""
+    cfg = dataclasses.replace(
+        get_smoke_config(arch), dtype="float32", capacity_factor=8.0)
+    params = init_params(cfg, KEY)
+    s = 10
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, s)), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.use_mrope:
+        batch["pos"] = jnp.broadcast_to(
+            jnp.arange(s)[None, :, None], (2, s, 3)).astype(jnp.int32)
+    frames = None
+    if cfg.is_encdec:
+        frames = jax.random.normal(KEY, (2, cfg.encoder_seq, cfg.d_model))
+        batch["frames"] = frames
+    full, _ = forward_logits(cfg, params, batch, CTX, remat="none")
+
+    cache = init_cache(cfg, 2, s, dtype=jnp.float32)
+    if cfg.is_encdec:
+        from repro.models.transformer import encoder
+        enc_out = encoder(cfg, params, frames, CTX)
+        cache["xk"] = jnp.einsum(
+            "bsd,ldhk->lbhsk", enc_out, params["layers"]["xwk"])
+        cache["xv"] = jnp.einsum(
+            "bsd,ldhk->lbhsk", enc_out, params["layers"]["xwv"])
+    outs = []
+    for t in range(s):
+        db = {"tokens": toks[:, t: t + 1]}
+        if cfg.use_mrope:
+            db["pos"] = jnp.full((2, 1, 3), t, jnp.int32)
+        lg, cache = decode_step(cfg, params, cache, db, CTX)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_consistency(arch):
+    """The published config matches the assignment numbers."""
+    cfg = get_config(arch)
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    if cfg.num_heads:
+        assert cfg.padded_heads % 16 == 0 or cfg.num_heads % 16 == 0
+        group = cfg.num_heads // cfg.num_kv_heads
+        assert cfg.padded_heads // cfg.padded_kv_heads == group
+    n = cfg.param_count()
+    expected = {
+        "mamba2-1.3b": (1.0e9, 1.6e9),
+        "whisper-small": (0.2e9, 0.3e9),
+        "qwen3-moe-235b-a22b": (2.1e11, 2.6e11),
+        "phi3.5-moe-42b-a6.6b": (3.8e10, 4.6e10),
+        "zamba2-2.7b": (2.2e9, 3.0e9),
+        "phi3-medium-14b": (1.2e10, 1.5e10),
+        "starcoder2-15b": (1.3e10, 1.7e10),
+        "phi4-mini-3.8b": (3.4e9, 4.3e9),
+        "gemma2-9b": (8.0e9, 1.05e10),
+        "qwen2-vl-2b": (1.2e9, 1.8e9),
+    }[arch]
+    assert expected[0] < n < expected[1], f"{arch}: {n:.3e}"
+
+
+def test_moe_capacity_dropping():
+    """Lower capacity factor drops tokens -> output changes but stays finite."""
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
+    lo = dataclasses.replace(cfg, capacity_factor=0.5)
+    params = init_params(lo, KEY)
+    batch = _real_batch(lo, 2, 32)
+    loss, _ = train_loss(lo, params, batch, CTX, remat="none")
+    assert np.isfinite(float(loss))
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = get_smoke_config("gemma2-9b")
+    params = init_params(cfg, KEY)
+    batch = _real_batch(cfg, 1, 16)
+    logits, _ = forward_logits(cfg, params, batch, CTX)
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_softcap + 1e-3
+
+
+def test_remat_matches_no_remat():
+    cfg = dataclasses.replace(get_smoke_config("phi4-mini-3.8b"),
+                              dtype="float32")
+    params = init_params(cfg, KEY)
+    batch = _real_batch(cfg, 2, 16)
+    l1, _ = train_loss(cfg, params, batch, CTX, remat="none")
+    l2, _ = train_loss(cfg, params, batch, CTX, remat="full")
+    l3, _ = train_loss(cfg, params, batch, CTX, remat="dots")
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    np.testing.assert_allclose(float(l1), float(l3), rtol=1e-6)
+
+
+def test_loss_ignores_negative_labels():
+    cfg = get_smoke_config("phi4-mini-3.8b")
+    params = init_params(cfg, KEY)
+    batch = _real_batch(cfg, 2, 16)
+    l_full, _ = train_loss(cfg, params, batch, CTX, remat="none")
+    batch2 = dict(batch)
+    batch2["labels"] = batch["labels"].at[:, 8:].set(-1)
+    l_mask, _ = train_loss(cfg, params, batch2, CTX, remat="none")
+    assert not np.isclose(float(l_full), float(l_mask))
+    assert np.isfinite(float(l_mask))

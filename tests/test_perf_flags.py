@@ -1,0 +1,119 @@
+"""Every REPRO_PERF optimization must be semantics-preserving: the
+flagged paths are compared against the baseline paths (values AND
+gradients)."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(5)
+
+
+@pytest.fixture
+def perf_env():
+    old = os.environ.get("REPRO_PERF", "")
+    yield
+    os.environ["REPRO_PERF"] = old
+    jax.clear_caches()
+
+
+@pytest.mark.parametrize("kwargs", [{}, {"softcap": 20.0}, {"window": 200},
+                                    {"causal": False}])
+def test_flash_vjp_matches_autodiff(kwargs):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 4, 256, 64))
+    k = jax.random.normal(ks[1], (2, 2, 256, 64))
+    v = jax.random.normal(ks[2], (2, 2, 256, 64))
+
+    def la(q, k, v):
+        return jnp.sum(jnp.sin(ref.chunked_flash_attention(
+            q, k, v, block_k=128, **kwargs)))
+
+    def lb(q, k, v):
+        return jnp.sum(jnp.sin(ref.flash_attention_vjp(
+            q, k, v, block_k=128, **kwargs)))
+
+    va, ga = jax.value_and_grad(la, argnums=(0, 1, 2))(q, k, v)
+    vb, gb = jax.value_and_grad(lb, argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(float(va), float(vb), rtol=1e-5)
+    for a, b in zip(ga, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_chunked_matches_oracle():
+    ks = jax.random.split(KEY, 5)
+    b, l, h, g, p, n = 1, 256, 4, 2, 32, 16
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, l, g, n)) / 4
+    cm = jax.random.normal(ks[4], (b, l, g, n)) / 4
+    y1, h1 = ref.ssd_scan(x, dt, a, bm, cm, return_state=True)
+    y2, h2 = ref.ssd_scan_chunked(x, dt, a, bm, cm, chunk=64)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)
+    g1 = jax.grad(lambda x: jnp.sum(jnp.tanh(
+        ref.ssd_scan(x, dt, a, bm, cm))))(x)
+    g2 = jax.grad(lambda x: jnp.sum(jnp.tanh(ref.ssd_scan_chunked(
+        x, dt, a, bm, cm, chunk=64, return_state=False))))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_moe_sort_dispatch_bit_exact(perf_env):
+    import dataclasses
+    from repro.configs.base import get_smoke_config
+    from repro.models import init_params, train_loss
+    from repro.models.layers import ShardCtx
+
+    cfg = dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"),
+                              dtype="float32", capacity_factor=8.0)
+    params = init_params(cfg, KEY)
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)}
+    batch["labels"] = batch["tokens"]
+
+    def run():
+        jax.clear_caches()
+        loss, _ = train_loss(cfg, params, batch, ShardCtx(), remat="none")
+        grads = jax.grad(lambda p: train_loss(
+            cfg, p, batch, ShardCtx(), remat="none")[0])(params)
+        return float(loss), grads
+
+    os.environ["REPRO_PERF"] = "moe_sort_dispatch"
+    l1, g1 = run()
+    os.environ["REPRO_PERF"] = ""
+    l2, g2 = run()
+    assert l1 == l2
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decode_pet_close(perf_env):
+    from repro.configs.base import get_smoke_config
+    from repro.models import decode_step, init_cache, init_params
+    from repro.models.layers import ShardCtx
+
+    cfg = get_smoke_config("phi4-mini-3.8b")
+    params = init_params(cfg, KEY)
+    batch = {"tokens": jnp.ones((2, 1), jnp.int32)}
+
+    def run():
+        jax.clear_caches()
+        cache = init_cache(cfg, 2, 16)
+        logits, _ = decode_step(cfg, params, cache, batch, ShardCtx())
+        return np.asarray(logits, np.float32)
+
+    os.environ["REPRO_PERF"] = "decode_pet"
+    l1 = run()
+    os.environ["REPRO_PERF"] = ""
+    l2 = run()
+    np.testing.assert_allclose(l1, l2, rtol=3e-2, atol=3e-2)  # bf16 probs

@@ -1,0 +1,48 @@
+"""Spectral diagnostics tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import spectral
+from repro.configs.base import get_smoke_config
+from repro.models import init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_matrix_spectrum_matches_numpy():
+    w = jax.random.normal(KEY, (48, 160))
+    s = spectral.matrix_spectrum(w, top_k=8)
+    want = np.linalg.svd(np.asarray(w), compute_uv=False)[:8]
+    np.testing.assert_allclose(np.asarray(s), want, rtol=1e-3)
+
+
+def test_matrix_spectrum_batched_and_tall():
+    w = jax.random.normal(KEY, (3, 200, 64))  # stacked, tall
+    s = spectral.matrix_spectrum(w, top_k=4)
+    assert s.shape == (3, 4)
+    for i in range(3):
+        want = np.linalg.svd(np.asarray(w[i]), compute_uv=False)[:4]
+        np.testing.assert_allclose(np.asarray(s[i]), want, rtol=1e-3)
+
+
+def test_effective_rank_limits():
+    flat = jnp.ones((8,))
+    assert float(spectral.effective_rank(flat)) > 7.9
+    spike = jnp.asarray([1.0] + [1e-9] * 7)
+    assert float(spectral.effective_rank(spike)) < 1.1
+
+
+def test_tree_spectra_on_model():
+    cfg = get_smoke_config("phi4-mini-3.8b")
+    params = init_params(cfg, KEY)
+    rep = spectral.tree_spectra(params, top_k=4)
+    assert any("w_up" in k for k in rep)
+    assert any("embed" in k for k in rep)
+    for d in rep.values():
+        assert np.all(np.isfinite(np.asarray(d["top"])))
+    # low-rank weight is detected
+    lowrank = {"w": jnp.outer(jnp.ones(64), jnp.ones(64))}
+    er = spectral.tree_spectra(lowrank, top_k=8)["w"]["erank"]
+    assert float(er) < 1.1
+    print(spectral.summarize(rep)[:200])
