@@ -38,13 +38,7 @@ def align_signs(u_hat: np.ndarray, u: np.ndarray) -> np.ndarray:
 def repaired_matrix(a: np.ndarray, num_blocks: int, method: str,
                     key) -> np.ndarray:
     m, n = a.shape
-    adj = (ranky.row_adjacency(jnp.asarray(a))
-           if method in ("neighbor", "neighbor_random") else None)
-    blocks = jnp.transpose(
-        jnp.asarray(a).reshape(m, num_blocks, n // num_blocks), (1, 0, 2))
-    keys = jax.random.split(key, num_blocks)
-    fixed = jax.vmap(
-        lambda b, k: ranky.repair_block(b, method, k, adj))(blocks, keys)
+    fixed = ranky.split_and_repair(jnp.asarray(a), num_blocks, method, key)
     return np.asarray(jnp.transpose(fixed, (1, 0, 2)).reshape(m, n),
                       np.float64)
 
@@ -61,7 +55,7 @@ def run_table(method: str, *, rows=539, cols=17_088, density=2e-3,
     only up to rotation, which would contaminate e_u with basis
     ambiguity rather than algorithmic error (see EXPERIMENTS.md).
     """
-    enable_x64 = lambda: jax.enable_x64(True)  # context-manager config API
+    from repro.compat import enable_x64  # context-manager config API
 
     coo = sparse.ensure_full_row_rank(
         sparse.random_bipartite(rows, cols, density, seed=seed,

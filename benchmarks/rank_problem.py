@@ -29,7 +29,7 @@ from repro.core import ranky, sparse
 
 def run(rows=539, cols=17_088, density=4e-4, blocks=(8, 32), seed=2021,
         verbose=True):
-    enable_x64 = lambda: jax.enable_x64(True)  # context-manager config API
+    from repro.compat import enable_x64  # context-manager config API
 
     out = []
     coo = sparse.ensure_full_row_rank(

@@ -39,6 +39,11 @@ def main() -> None:
                      r["seconds"] * 1e6,
                      f"e_sigma={r['e_sigma']:.3e};comm={r['comm_bytes']}"))
 
+    from benchmarks import sparse_path
+    print("# sparse vs dense execution path", flush=True)
+    for r in sparse_path.run(**({"cols": 170_897} if full else {})):
+        rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
+
     if not skip_lm:
         from benchmarks import lm_step
         print("# lm steps (reduced configs)", flush=True)

@@ -1,0 +1,109 @@
+"""Sparse-vs-dense execution path A/B (the tentpole of the sparse-native
+refactor).
+
+Two comparisons at the paper's density (5e-4):
+
+1. The gram op in isolation: dense ``kernels.ops.blockgram`` (streams
+   every column, >99.9% zeros at paper density) vs the sparse
+   ``kernels.ops.sparse_gram`` (streams padded-ELL nnz slots).  Bytes
+   accounting per gram of one (M, N) block:
+     dense : M * N * 4            (every f32 of the block)
+     sparse: C * K * 8            (int32 row + f32 val per ELL slot)
+2. End-to-end single-host ``ranky_svd`` (gram merge) on the dense matrix
+   vs the BlockEll container, including rank repair.
+
+Default shape is the paper's 539 rows at 1/10 width (CPU-friendly, like
+benchmarks/paper_tables.py); ``--full`` uses the exact 539 x 170897.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ranky, sparse
+from repro.kernels import ops as kops
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(rows=539, cols=17_088, density=5e-4, blocks=8, seed=2020,
+        verbose=True):
+    coo = sparse.ensure_full_row_rank(
+        sparse.random_bipartite(rows, cols, density, seed=seed), seed=seed)
+    a0 = coo.todense()
+    a = sparse.pad_to_block_multiple(a0, blocks)
+    ell = sparse.block_ell_from_coo(coo, blocks)
+    out = []
+
+    # --- 1. gram op A/B on the whole matrix (the D=1 block) ------------
+    ell1 = sparse.block_ell_from_coo(coo, 1)
+    c_cap, k_cap = ell1.capacity
+    aj = jnp.asarray(a0)
+    e_rows = jnp.asarray(ell1.col_rows[0])
+    e_vals = jnp.asarray(ell1.col_vals[0])
+    f_dense = jax.jit(lambda x: kops.blockgram(x))
+    f_sparse = jax.jit(lambda r, v: kops.sparse_gram(r, v, rows))
+    t_dense = _time(f_dense, aj)
+    t_sparse = _time(f_sparse, e_rows, e_vals)
+    err = float(jnp.abs(f_dense(aj) - f_sparse(e_rows, e_vals)).max())
+    bytes_dense = rows * cols * 4
+    bytes_sparse = c_cap * k_cap * 8
+    shape = f"{rows}x{cols}"
+    out.append({"name": f"gram_dense_{shape}", "seconds": t_dense,
+                "derived": f"bytes={bytes_dense}"})
+    out.append({"name": f"gram_sparse_{shape}", "seconds": t_sparse,
+                "derived": (f"bytes={bytes_sparse};max_err={err:.2e};"
+                            f"speedup={t_dense / t_sparse:.2f}x;"
+                            f"bytes_ratio={bytes_dense / bytes_sparse:.1f}x")})
+    if verbose:
+        print(f"  gram {shape} nnz={coo.nnz}: dense {t_dense*1e3:8.2f}ms "
+              f"({bytes_dense/1e6:.1f}MB) | sparse {t_sparse*1e3:8.2f}ms "
+              f"({bytes_sparse/1e6:.2f}MB) | {t_dense/t_sparse:.2f}x faster, "
+              f"max_err={err:.2e}", flush=True)
+
+    # --- 2. end-to-end ranky_svd A/B -----------------------------------
+    for method in ("none", "neighbor_random"):
+        key = jax.random.PRNGKey(seed)
+        fd = lambda x: ranky.ranky_svd(x, num_blocks=blocks, method=method,
+                                       merge_mode="gram", key=key)
+        t_d = _time(fd, jnp.asarray(a))
+        t_s = _time(fd, ell)
+        s_d = np.asarray(fd(jnp.asarray(a))[1])
+        s_s = np.asarray(fd(ell)[1])
+        # For method="none" both paths factor the same matrix exactly;
+        # repair methods draw different in-block columns, so compare the
+        # dominant singular values only (repair perturbs the tail).
+        e = float(np.abs(s_s - s_d).max() if method == "none"
+                  else abs(s_s[0] - s_d[0]))
+        out.append({"name": f"ranky_dense_{method}_D{blocks}",
+                    "seconds": t_d, "derived": ""})
+        out.append({"name": f"ranky_sparse_{method}_D{blocks}",
+                    "seconds": t_s,
+                    "derived": f"e_vs_dense={e:.3e};"
+                               f"speedup={t_d / t_s:.2f}x"})
+        if verbose:
+            print(f"  ranky_svd[{method:16s}] D={blocks}: dense "
+                  f"{t_d*1e3:8.2f}ms | sparse {t_s*1e3:8.2f}ms | "
+                  f"{t_d/t_s:.2f}x, e={e:.3e}", flush=True)
+    return out
+
+
+def main(full: bool = False):
+    kw = {"cols": 170_897} if full else {}
+    return run(**kw)
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

@@ -1,0 +1,43 @@
+"""Version-portability shims for jax APIs that moved between releases.
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` to
+  ``jax.shard_map``, renaming its replication-check kwarg
+  ``check_rep`` -> ``check_vma`` along the way.
+* ``jax.lax.axis_size`` is new; older releases use the classic
+  ``psum(1, axis)`` idiom.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # pragma: no cover — older jax
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+    _CHECK_KW = "check_rep"
+
+
+def shard_map_nocheck(fn, *, mesh, in_specs, out_specs):
+    """shard_map with replication checking off (merge collectives produce
+    replicated outputs the static checker can't see), portable across the
+    check_rep -> check_vma rename."""
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: False})
+
+
+def axis_size(ax: str):
+    """Size of a named mesh axis from inside a shard_map/pmap region."""
+    if hasattr(jax.lax, "axis_size"):  # jax >= 0.6
+        return jax.lax.axis_size(ax)
+    return jax.lax.psum(1, ax)
+
+
+def enable_x64():
+    """Context manager enabling 64-bit mode (jax.enable_x64 is the new
+    name of jax.experimental.enable_x64)."""
+    if hasattr(jax, "enable_x64"):  # jax >= 0.6
+        return jax.enable_x64(True)
+    from jax.experimental import enable_x64 as _enable_x64  # type: ignore
+
+    return _enable_x64(True)

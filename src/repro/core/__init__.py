@@ -7,8 +7,12 @@ from repro.core.ranky import (  # noqa: F401
     neighbor_checker,
     neighbor_random_checker,
     repair_block,
+    repair_block_sparse,
     ranky_svd,
     row_adjacency,
+    row_adjacency_sparse,
+    sparse_lonely_rows,
+    split_and_repair,
 )
 from repro.core.distributed import distributed_ranky_svd  # noqa: F401
 from repro.core import sparse, spectral, svd  # noqa: F401

@@ -31,17 +31,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import svd as lsvd
 from repro.core import ranky
+from repro.core import sparse
 
-try:  # jax >= 0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.compat import axis_size as _one_axis_size
+from repro.compat import shard_map_nocheck as shard_map
 
 
 def _axis_size(axes: Sequence[str]) -> jnp.ndarray:
     sz = 1
     for ax in axes:
-        sz = sz * jax.lax.axis_size(ax)
+        sz = sz * _one_axis_size(ax)
     return sz
 
 
@@ -49,7 +48,7 @@ def _flat_index(axes: Sequence[str]) -> jnp.ndarray:
     """Row-major flat device index across the given mesh axes."""
     idx = jnp.zeros((), jnp.int32)
     for ax in axes:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        idx = idx * _one_axis_size(ax) + jax.lax.axis_index(ax)
     return idx
 
 
@@ -127,6 +126,68 @@ def _svd_shard_fn(
     return u, s, v_blk
 
 
+def _sparse_local_repair(
+    ids: jnp.ndarray, rows: jnp.ndarray, vals: jnp.ndarray,
+    method: str, key: jax.Array, axes: Sequence[str], m: int, width: int,
+):
+    """Sparse-native twin of _local_repair: the global row adjacency is
+    the psum of binarized local grams, computed from the stored-column
+    panel (C x M, nnz-proportional) instead of the dense block."""
+    key = jax.random.fold_in(key, _flat_index(axes))
+    adj = None
+    if method in ("neighbor", "neighbor_random"):
+        p = sparse.stored_col_panel(rows, vals, m, binarize=True)
+        adj_local = p.T @ p
+        adj = jax.lax.psum(adj_local, axes)
+        adj = (adj > 0) & ~jnp.eye(m, dtype=bool)
+    return ranky.repair_block_sparse(ids, rows, vals, method, key,
+                                     m=m, width=width, row_adj=adj)
+
+
+def _sparse_svd_shard_fn(
+    ids: jnp.ndarray,
+    rows: jnp.ndarray,
+    vals: jnp.ndarray,
+    key: jax.Array,
+    *,
+    m: int,
+    width: int,
+    axes: Tuple[str, ...],
+    method: str,
+    merge_mode: str,
+    hierarchical: bool,
+    use_kernel: bool,
+    want_right: bool,
+):
+    """Per-device body for the sparse container: each device owns one
+    column block's ELL arrays (leading block axis sharded to size 1).
+    The merge is representation-agnostic — psum of grams / all-gather of
+    panels is identical to the dense shard fn."""
+    ids, rows, vals = ids[0], rows[0], vals[0]
+    rc, rm = _sparse_local_repair(ids, rows, vals, method, key, axes,
+                                  m, width)
+    g_local = lsvd.sparse_gram_block(ids, rows, vals, rc, rm, m,
+                                     use_kernel=use_kernel)
+
+    if merge_mode == "gram":
+        u, s = lsvd.eigh_to_svd(jax.lax.psum(g_local, axes))
+    elif merge_mode == "proxy":
+        u_i, s_i = lsvd.eigh_to_svd(g_local)
+        panel = lsvd.proxy_panel(u_i, s_i)
+        if hierarchical and len(axes) > 1:
+            u1, s1 = _merge_proxy_over(panel, axes[-1:])
+            u, s = _merge_proxy_over(lsvd.proxy_panel(u1, s1), axes[:-1])
+        else:
+            u, s = _merge_proxy_over(panel, axes)
+    else:
+        raise ValueError(f"unknown merge_mode {merge_mode!r}")
+
+    if not want_right:
+        return u, s
+    v_blk = lsvd.sparse_right_vectors(ids, rows, vals, rc, rm, width, u, s)
+    return u, s, v_blk
+
+
 def distributed_ranky_svd(
     a: jax.Array,
     mesh: Mesh,
@@ -143,8 +204,12 @@ def distributed_ranky_svd(
     """Distributed Ranky SVD of a column-sharded short-and-fat matrix.
 
     Args:
-      a: (M, N) array; will be placed with columns sharded over
-        ``block_axes`` (N must divide by the product of those axis sizes).
+      a: (M, N) array, placed with columns sharded over ``block_axes``
+        (N must divide by the product of those axis sizes) — or a
+        sparse.BlockEll whose block count equals that product, in which
+        case each device owns one block's ELL arrays and the whole
+        pipeline is sparse-native (gram-local only; merge collectives
+        are identical to the dense path).
       mesh: the device mesh.
       block_axes: mesh axes the columns (= paper blocks) shard over.
         ``("pod", "model")`` + ``hierarchical=True`` gives the two-level
@@ -160,6 +225,38 @@ def distributed_ranky_svd(
     if key is None:
         key = jax.random.PRNGKey(0)
 
+    if isinstance(a, sparse.BlockEll):
+        d_total = 1
+        for ax in axes:
+            d_total *= mesh.shape[ax]
+        if a.num_blocks != d_total:
+            raise ValueError(
+                f"BlockEll has {a.num_blocks} blocks; mesh axes {axes} "
+                f"give {d_total} devices (one block per device)")
+        if local_mode == "svd":
+            raise ValueError(
+                "the sparse path is gram-native; use local_mode='gram'")
+        in_spec = (P(axes), P(axes), P(axes), P())
+        out_spec = (P(), P()) if not want_right else (P(), P(), P(axes, None))
+        fn = partial(
+            _sparse_svd_shard_fn,
+            m=a.m,
+            width=a.width,
+            axes=axes,
+            method=method,
+            merge_mode=merge_mode,
+            hierarchical=hierarchical,
+            use_kernel=use_kernel,
+            want_right=want_right,
+        )
+        sharded = shard_map(fn, mesh=mesh, in_specs=in_spec,
+                            out_specs=out_spec)
+        blk_sh = NamedSharding(mesh, P(axes))
+        ids = jax.device_put(jnp.asarray(a.col_ids), blk_sh)
+        rows = jax.device_put(jnp.asarray(a.col_rows), blk_sh)
+        vals = jax.device_put(jnp.asarray(a.col_vals), blk_sh)
+        return jax.jit(sharded)(ids, rows, vals, key)
+
     in_spec = (P(None, axes), P())
     out_spec = (P(), P()) if not want_right else (P(), P(), P(axes, None))
 
@@ -173,7 +270,6 @@ def distributed_ranky_svd(
         use_kernel=use_kernel,
         want_right=want_right,
     )
-    sharded = shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
-                        check_vma=False)
+    sharded = shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec)
     a = jax.device_put(a, NamedSharding(mesh, P(None, axes)))
     return jax.jit(sharded)(a, key)

@@ -39,14 +39,8 @@ def _merge_group(panels: jnp.ndarray, rank: int) -> jnp.ndarray:
     return u[:, :rank] * s[None, :rank]
 
 
-@partial(jax.jit, static_argnames=("rank",))
-def _leaf_panel(blk: jnp.ndarray, rank: int) -> jnp.ndarray:
-    u, s = lsvd.local_svd_gram(blk)
-    return lsvd.proxy_panel(u, s)[:, :rank]
-
-
 def hierarchical_ranky_svd(
-    a_dense: jnp.ndarray,
+    a,
     *,
     num_blocks: int,
     fanout: int = 4,
@@ -57,30 +51,22 @@ def hierarchical_ranky_svd(
     """Tree-merged Ranky SVD.  Returns (U, S) with S of length ``rank``
     (defaults to M — exact; r < M gives the truncated incremental
     algorithm whose failure on rank-deficient blocks motivates Ranky).
+
+    ``a`` is a dense (M, N) array (N must divide by num_blocks) or a
+    sparse.BlockEll container (sparse-native leaves: gram + eigh per
+    block, no block ever densified) — the same shared prologue as
+    ranky.ranky_svd handles both.
     """
-    m, n = a_dense.shape
-    if n % num_blocks:
-        raise ValueError("pad columns so N % num_blocks == 0")
+    from repro.core import sparse
+
+    m = a.m if isinstance(a, sparse.BlockEll) else a.shape[0]
     r = m if rank is None else min(rank, m)
-    if key is None:
-        key = jax.random.PRNGKey(0)
 
-    blocks = jnp.transpose(
-        a_dense.reshape(m, num_blocks, n // num_blocks), (1, 0, 2)
-    )
+    blocks = ranky.split_and_repair(a, num_blocks, method, key)
 
-    adj = (
-        ranky.row_adjacency(a_dense)
-        if method in ("neighbor", "neighbor_random")
-        else None
-    )
-    keys = jax.random.split(key, num_blocks)
-    blocks = jax.vmap(lambda b, k: ranky.repair_block(b, method, k, adj))(
-        blocks, keys
-    )
-
-    # Level 0: per-block factorization -> (D, M, r) panels.
-    panels = jax.vmap(lambda b: _leaf_panel(b, r))(blocks)
+    # Level 0: per-block factorization -> (D, M, r) truncated proxy panels.
+    us, ss = lsvd.local_svd_gram_stack(blocks)
+    panels = (us * ss[:, None, :])[:, :, :r]
 
     # Tree merge, groups of ``fanout`` per level.
     while panels.shape[0] > 1:

@@ -24,11 +24,13 @@ Methods:
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import sparse
 
 METHODS = ("none", "random", "neighbor", "neighbor_random")
 
@@ -140,6 +142,114 @@ def repair_block(
 
 
 # ---------------------------------------------------------------------------
+# Sparse-native checkers (index-array algebra; the dense checkers above
+# are the semantic oracles — tests/test_sparse_path.py pins the parity)
+# ---------------------------------------------------------------------------
+
+def sparse_row_counts(
+    col_rows: jnp.ndarray, col_vals: jnp.ndarray, m: int
+) -> jnp.ndarray:
+    """(M,) per-row nonzero counts of one ELL block (padding slots inert)."""
+    present = (col_vals != 0).astype(jnp.int32)
+    return jnp.zeros((m,), jnp.int32).at[col_rows].add(present)
+
+
+def sparse_lonely_rows(
+    col_rows: jnp.ndarray, col_vals: jnp.ndarray, m: int
+) -> jnp.ndarray:
+    """Boolean (M,) lonely mask straight from the index arrays."""
+    return sparse_row_counts(col_rows, col_vals, m) == 0
+
+
+def row_adjacency_sparse(ell: "sparse.BlockEll") -> jnp.ndarray:
+    """Global row adjacency from the blocked sparse container: psum-style
+    sum of per-block binarized grams (counts of shared stored columns),
+    identical in semantics to ``row_adjacency`` on the dense matrix."""
+    def one(rows, vals):
+        p = sparse.stored_col_panel(rows, vals, ell.m, binarize=True)
+        return p.T @ p
+
+    counts = jax.vmap(one)(ell.col_rows, ell.col_vals).sum(axis=0)
+    return (counts > 0) & ~jnp.eye(ell.m, dtype=bool)
+
+
+def sparse_random_checker(
+    col_rows: jnp.ndarray, col_vals: jnp.ndarray, m: int, width: int,
+    key: jax.Array,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RandomChecker on index arrays: (repair_cols, repair_mask).
+
+    Draws the same ``_random_cols(key, M, W)`` the dense checker draws,
+    so for a given key the sparse and dense repairs are bit-identical.
+    """
+    lonely = sparse_lonely_rows(col_rows, col_vals, m)
+    return _random_cols(key, m, width), lonely
+
+
+def sparse_neighbor_checker(
+    col_ids: jnp.ndarray, col_rows: jnp.ndarray, col_vals: jnp.ndarray,
+    row_adj: jnp.ndarray, m: int, key: jax.Array,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """NeighborChecker on index arrays.
+
+    Candidate columns of a lonely row are columns of this block where a
+    graph neighbor has an entry — all such columns are *stored* columns,
+    so the choice runs over the (M, C) stored-column candidate mask and
+    maps back through col_ids.  Same candidate set as the dense checker
+    (non-stored columns are all-zero and never candidates).
+    """
+    lonely = sparse_lonely_rows(col_rows, col_vals, m)
+    presence = sparse.stored_col_panel(col_rows, col_vals, m, binarize=True)
+    cand = (row_adj.astype(jnp.float32) @ presence.T) > 0  # (M, C)
+    stored_idx, has_cand = _choose_masked_col(key, cand)
+    return col_ids[stored_idx], lonely & has_cand
+
+
+def sparse_neighbor_random_checker(
+    col_ids: jnp.ndarray, col_rows: jnp.ndarray, col_vals: jnp.ndarray,
+    row_adj: jnp.ndarray, m: int, width: int, key: jax.Array,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Neighbor pass, random fallback for rows without reachable columns."""
+    k_nb, k_rand = jax.random.split(key)
+    nb_cols, nb_mask = sparse_neighbor_checker(
+        col_ids, col_rows, col_vals, row_adj, m, k_nb)
+    lonely = sparse_lonely_rows(col_rows, col_vals, m)
+    rand_cols = _random_cols(k_rand, m, width)
+    cols = jnp.where(nb_mask, nb_cols, rand_cols)
+    return cols, lonely
+
+
+def repair_block_sparse(
+    col_ids: jnp.ndarray,
+    col_rows: jnp.ndarray,
+    col_vals: jnp.ndarray,
+    method: str,
+    key: jax.Array,
+    *,
+    m: int,
+    width: int,
+    row_adj: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch one Ranky method on one sparse block; returns the repair
+    side-band (repair_cols (M,), repair_mask (M,)) — the at-most-one
+    1-valued entry per row the checker adds, landing in the reserved
+    capacity of sparse.RepairedSparseBlocks instead of mutating the ELL."""
+    if method == "none":
+        return (jnp.zeros((m,), jnp.int32), jnp.zeros((m,), bool))
+    if method == "random":
+        return sparse_random_checker(col_rows, col_vals, m, width, key)
+    if row_adj is None:
+        raise ValueError(f"method {method!r} needs the row adjacency")
+    if method == "neighbor":
+        return sparse_neighbor_checker(
+            col_ids, col_rows, col_vals, row_adj, m, key)
+    if method == "neighbor_random":
+        return sparse_neighbor_random_checker(
+            col_ids, col_rows, col_vals, row_adj, m, width, key)
+    raise ValueError(f"unknown Ranky method {method!r}; want one of {METHODS}")
+
+
+# ---------------------------------------------------------------------------
 # Literal per-row numpy references (paper pseudocode transliterated).
 # Used only by property tests to pin the vectorized semantics.
 # ---------------------------------------------------------------------------
@@ -185,13 +295,64 @@ def ref_neighbor_candidates(
 
 
 # ---------------------------------------------------------------------------
-# Single-host end-to-end pipeline (reference for the distributed version)
+# Shared prologue + single-host end-to-end pipeline (reference for the
+# distributed version)
 # ---------------------------------------------------------------------------
+
+BlockInput = Union[jnp.ndarray, "sparse.BlockEll"]
+
+
+def split_and_repair(
+    a: BlockInput,
+    num_blocks: int,
+    method: str,
+    key: Optional[jax.Array] = None,
+):
+    """The block-split -> row-adjacency -> vmapped-repair prologue shared
+    by ``ranky_svd``, ``hierarchy.hierarchical_ranky_svd`` and the
+    benchmark evaluation protocol (benchmarks/paper_tables.py).
+
+    * dense (M, N) array  -> repaired (D, M, N/D) block stack
+      (N must already divide by num_blocks — sparse.pad_to_block_multiple)
+    * sparse.BlockEll     -> sparse.RepairedSparseBlocks (the immutable
+      ELL plus the per-block repair side-band; nothing is densified)
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, num_blocks)
+    needs_adj = method in ("neighbor", "neighbor_random")
+
+    if isinstance(a, sparse.BlockEll):
+        if a.num_blocks != num_blocks:
+            raise ValueError(
+                f"BlockEll has {a.num_blocks} blocks, got num_blocks={num_blocks}")
+        adj = row_adjacency_sparse(a) if needs_adj else None
+
+        def fix(ids, rows, vals, k):
+            return repair_block_sparse(ids, rows, vals, method, k,
+                                       m=a.m, width=a.width, row_adj=adj)
+
+        rc, rm = jax.vmap(fix)(a.col_ids, a.col_rows, a.col_vals, keys)
+        return sparse.RepairedSparseBlocks(a, rc, rm)
+
+    m, n = a.shape
+    if n % num_blocks:
+        raise ValueError("pad columns so N % num_blocks == 0")
+    blocks = jnp.transpose(
+        a.reshape(m, num_blocks, n // num_blocks), (1, 0, 2)
+    )  # (D, M, N/D)
+    adj = row_adjacency(a) if needs_adj else None
+
+    def fix(blk, k):
+        return repair_block(blk, method, k, adj)
+
+    return jax.vmap(fix)(blocks, keys)
+
 
 @partial(jax.jit, static_argnames=("num_blocks", "method", "local_mode",
                                    "merge_mode", "undetermined_tail"))
 def ranky_svd(
-    a_dense: jnp.ndarray,
+    a: BlockInput,
     *,
     num_blocks: int,
     method: str = "neighbor_random",
@@ -202,8 +363,11 @@ def ranky_svd(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One-level Ranky distributed SVD, single host: returns (U, S) of A.
 
-    N must be divisible by num_blocks (pad with zero columns first — this
-    is lossless for U and S; see sparse.pad_to_block_multiple).
+    ``a`` is either a dense (M, N) array — N must divide by num_blocks,
+    pad with zero columns first (lossless for U and S; see
+    sparse.pad_to_block_multiple) — or a sparse.BlockEll container, in
+    which case the whole pipeline is sparse-native (gram local mode only;
+    no (M, N/D) block is ever materialized).
 
     ``undetermined_tail`` emulates the rank problem the paper fixes: a
     rank-deficient block's SVD has zero singular values whose left-vector
@@ -216,31 +380,21 @@ def ranky_svd(
     """
     from repro.core import svd as lsvd
 
-    m, n = a_dense.shape
-    if n % num_blocks:
-        raise ValueError("pad columns so N % num_blocks == 0")
+    is_sparse = isinstance(a, sparse.BlockEll)
     if key is None:
         key = jax.random.PRNGKey(0)
 
-    blocks = jnp.transpose(
-        a_dense.reshape(m, num_blocks, n // num_blocks), (1, 0, 2)
-    )  # (D, M, N/D)
-
-    adj = row_adjacency(a_dense) if method in ("neighbor", "neighbor_random") else None
-    keys = jax.random.split(key, num_blocks)
-
-    def fix(blk, k):
-        return repair_block(blk, method, k, adj)
-
-    blocks = jax.vmap(fix)(blocks, keys)
+    blocks = split_and_repair(a, num_blocks, method, key)
 
     if merge_mode == "gram":
-        grams = jax.vmap(lambda b: lsvd.gram(b))(blocks)
-        return lsvd.merge_grams_eigh(grams)
+        return lsvd.merge_grams_eigh(lsvd.gram_stack(blocks))
 
     if local_mode == "gram":
-        us = jax.vmap(lambda b: lsvd.local_svd_gram(b))(blocks)
+        us = lsvd.local_svd_gram_stack(blocks)
     elif local_mode == "svd":
+        if is_sparse:
+            raise ValueError(
+                "the sparse path is gram-native; use local_mode='gram'")
         us = jax.vmap(lsvd.local_svd_exact)(blocks)
     else:
         raise ValueError(f"unknown local_mode {local_mode!r}")
@@ -253,7 +407,7 @@ def ranky_svd(
         noise = jax.vmap(
             lambda k, p: jax.random.normal(k, p.shape, p.dtype))(
                 nkeys, panels)
-        eps_scale = jnp.sqrt(jnp.finfo(a_dense.dtype).eps)
+        eps_scale = jnp.sqrt(jnp.finfo(panels.dtype).eps)
         panels = jnp.where(dead[:, None, :],
                            noise * smax[:, :, None] * eps_scale, panels)
     return lsvd.merge_panels_svd(panels)

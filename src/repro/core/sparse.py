@@ -1,10 +1,34 @@
-"""Sparse-matrix utilities for Ranky.
+"""Sparse-matrix containers and block-decomposition utilities for Ranky.
 
-JAX/XLA has no production sparse tensor type, so we represent sparse
-matrices densely with *structural* sparsity: the algorithmic parts of the
-paper (lonely-row detection, neighbor discovery) operate on boolean masks.
-This module provides generators for paper-style bipartite matrices and a
-small COO container used by the data pipeline.
+Two representations, one convention:
+
+* ``COOMatrix`` — host-side numpy COO triples.  The data pipeline builds
+  matrices here; the *dense* execution path densifies it once and never
+  looks back.
+* ``BlockEll`` — the device-side blocked sparse container for the
+  sparse-native execution path.  The matrix is split column-wise into
+  ``D`` blocks (the paper's ``A = [A^1 | ... | A^D]``) and each block is
+  stored as padded ELL **by column**: every stored (= nonempty) column
+  carries up to ``K`` (row, value) slots.  All per-block arrays have the
+  same capacity so the leading block axis can be vmapped over on one
+  host or sharded over a mesh axis (core/distributed.py) — the container
+  is a registered pytree and flows through jit/shard_map unchanged.
+
+Rank repair never mutates the ELL arrays: every block reserves a
+fixed-capacity *repair side-band* of at most one entry per row (that is
+exactly what the paper's checkers add — one 1-valued entry per lonely
+row per block).  ``RepairedSparseBlocks`` pairs the immutable ELL with
+the per-block ``(repair_cols, repair_mask)`` arrays; core/svd.py knows
+how to form exact grams of ``E + R`` without ever densifying a block.
+
+Block-splitting convention (single source of truth for host slicing,
+device reshaping, and the sparse container): block width
+``W = ceil(N / D)``; block ``d`` owns columns ``[d*W, min((d+1)*W, N))``.
+Device paths zero-pad the final block to ``W`` columns
+(``pad_to_block_multiple``) — zero columns change nothing about
+``A A^T``, ``U`` or ``S``.  ``block_col_bounds`` below implements the
+host half of the convention and tests/test_sparse_path.py pins the
+agreement.
 """
 from __future__ import annotations
 
@@ -13,10 +37,14 @@ from typing import Tuple
 
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
 
 @dataclasses.dataclass(frozen=True)
 class COOMatrix:
-    """Minimal COO container (host-side; densified before device work)."""
+    """Minimal COO container (host-side; the dense path densifies it,
+    the sparse path converts it to a BlockEll)."""
 
     rows: np.ndarray  # (nnz,) int32
     cols: np.ndarray  # (nnz,) int32
@@ -103,15 +131,28 @@ def ensure_full_row_rank(coo: COOMatrix, *, seed: int = 0) -> COOMatrix:
     )
 
 
+# ---------------------------------------------------------------------------
+# Block decomposition (one convention for host and device paths)
+# ---------------------------------------------------------------------------
+
+def block_width(n: int, num_blocks: int) -> int:
+    """Uniform device block width W = ceil(N / D)."""
+    return -(-n // num_blocks)
+
+
 def block_col_bounds(n: int, num_blocks: int, block_idx: int) -> Tuple[int, int]:
     """Column range [lo, hi) of block ``block_idx`` out of ``num_blocks``.
 
-    Matches the paper's ``(N/D)*d .. (N/D)*(d+1)`` split, with the
-    remainder folded into the final block.
+    Uses the uniform-width convention W = ceil(N / D): block d owns
+    ``[d*W, min((d+1)*W, N))`` so it lines up exactly with the device
+    paths, which zero-pad N to D*W (``pad_to_block_multiple``) and
+    reshape into equal (M, W) blocks.  Only the final block can be
+    narrower than W on the host side (its device twin carries the zero
+    padding).
     """
-    base = n // num_blocks
-    lo = base * block_idx
-    hi = base * (block_idx + 1) if block_idx < num_blocks - 1 else n
+    w = block_width(n, num_blocks)
+    lo = min(w * block_idx, n)
+    hi = min(w * (block_idx + 1), n)
     return lo, hi
 
 
@@ -133,3 +174,175 @@ def pad_to_block_multiple(dense: np.ndarray, num_blocks: int) -> np.ndarray:
     if rem == 0:
         return dense
     return np.concatenate([dense, np.zeros((m, rem), dtype=dense.dtype)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Device-side blocked sparse container (padded ELL by column)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockEll:
+    """Blocked padded-ELL sparse matrix: D column blocks of (M, W) each.
+
+    Per block, only nonempty columns are stored; stored column ``c`` of
+    block ``d`` keeps its local column index ``col_ids[d, c]`` and up to
+    K (row, value) slots ``col_rows[d, c, :] / col_vals[d, c, :]``.
+    Padding slots (both whole padding columns and unused row slots of a
+    real column) carry ``val == 0`` with ``row == 0`` / ``col_id == 0``
+    so every consumer can treat them as structural zeros.
+
+    C (stored-column capacity) and K (slots per column) are uniform
+    across blocks so the arrays stack on a leading D axis that vmaps on
+    a single host and shards over mesh axes in core/distributed.py.
+    """
+
+    col_ids: jnp.ndarray   # (D, C) int32 local column index within block
+    col_rows: jnp.ndarray  # (D, C, K) int32 row indices
+    col_vals: jnp.ndarray  # (D, C, K) float32 values (0 = padding slot)
+    m: int                 # global row count M
+    width: int             # block width W (columns per device block)
+    n: int                 # original (unpadded) global column count
+
+    def tree_flatten(self):
+        return ((self.col_ids, self.col_rows, self.col_vals),
+                (self.m, self.width, self.n))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.col_ids.shape[0]
+
+    @property
+    def capacity(self) -> Tuple[int, int]:
+        """(C, K): stored-column capacity and slots per stored column."""
+        return self.col_rows.shape[1], self.col_rows.shape[2]
+
+    @property
+    def padded_shape(self) -> Tuple[int, int]:
+        """(M, D*W) — shape of the zero-padded dense equivalent."""
+        return self.m, self.num_blocks * self.width
+
+    def todense_blocks(self) -> jnp.ndarray:
+        """(D, M, W) dense blocks — oracle/debug only, never the hot path."""
+        d, c, k = self.col_rows.shape
+        bidx = jnp.arange(d)[:, None, None]
+        cids = jnp.broadcast_to(self.col_ids[:, :, None], (d, c, k))
+        out = jnp.zeros((d, self.m, self.width), jnp.float32)
+        return out.at[bidx, self.col_rows, cids].add(self.col_vals)
+
+    def todense(self) -> jnp.ndarray:
+        """(M, D*W) dense matrix, identical to
+        ``pad_to_block_multiple(coo.todense(), D)`` — oracle/debug only."""
+        blocks = self.todense_blocks()
+        return jnp.transpose(blocks, (1, 0, 2)).reshape(self.padded_shape)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RepairedSparseBlocks:
+    """A BlockEll plus the rank-repair side-band.
+
+    Each checker adds at most ONE 1-valued entry per (block, row) — row
+    ``r`` of block ``d`` gains an entry at local column
+    ``repair_cols[d, r]`` iff ``repair_mask[d, r]``.  Keeping repairs in
+    this fixed-capacity side-band (instead of splicing them into the ELL
+    arrays) keeps the container immutable on device AND keeps grams
+    exact: a repair column may already be stored in the ELL part, and
+    core/svd.py:sparse_gram_block accounts for the E/R cross terms.
+    """
+
+    ell: BlockEll
+    repair_cols: jnp.ndarray  # (D, M) int32 local repair column per row
+    repair_mask: jnp.ndarray  # (D, M) bool   row actually repaired?
+
+    def tree_flatten(self):
+        return ((self.ell, self.repair_cols, self.repair_mask), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def todense_blocks(self) -> jnp.ndarray:
+        """(D, M, W) dense repaired blocks — oracle/debug only."""
+        d, m = self.repair_mask.shape
+        out = self.ell.todense_blocks()
+        bidx = jnp.arange(d)[:, None]
+        ridx = jnp.arange(m)[None, :]
+        # Repaired rows are all-zero inside their block, so add == set.
+        return out.at[bidx, ridx, self.repair_cols].add(
+            self.repair_mask.astype(jnp.float32))
+
+    def todense(self) -> jnp.ndarray:
+        blocks = self.todense_blocks()
+        return jnp.transpose(blocks, (1, 0, 2)).reshape(
+            self.ell.padded_shape)
+
+
+def stored_col_panel(
+    col_rows: jnp.ndarray,
+    col_vals: jnp.ndarray,
+    m: int,
+    *,
+    binarize: bool = False,
+) -> jnp.ndarray:
+    """(C, M) panel of one block's stored columns: entry [c, r] is the
+    value of stored column c at row r (or its 0/1 presence with
+    ``binarize=True``).  This is the nnz-proportional dense intermediate
+    every sparse-native routine shares — C ~ nnz, never M x W.
+    """
+    c = col_rows.shape[0]
+    v = (col_vals != 0).astype(jnp.float32) if binarize \
+        else col_vals.astype(jnp.float32)
+    return jnp.zeros((c, m), jnp.float32).at[
+        jnp.arange(c)[:, None], col_rows].add(v)
+
+
+def block_ell_from_coo(
+    coo: COOMatrix,
+    num_blocks: int,
+    *,
+    capacity_multiple: int = 8,
+) -> BlockEll:
+    """Build the device container from host COO triples.
+
+    Capacity is sized to the data: C = max stored columns per block
+    (rounded up to ``capacity_multiple`` for tile-friendly shapes), K =
+    max nonzeros in any single column.  Padding slots carry val 0.
+    """
+    m, n = coo.shape
+    w = block_width(n, num_blocks)
+    blk_of = coo.cols // w
+    local = (coo.cols % w).astype(np.int64)
+
+    per_block = []
+    c_max, k_max = 1, 1
+    for d in range(num_blocks):
+        sel = blk_of == d
+        lc, lr, lv = local[sel], coo.rows[sel], coo.vals[sel]
+        order = np.argsort(lc, kind="stable")
+        lc, lr, lv = lc[order], lr[order], lv[order]
+        uniq, start, counts = np.unique(lc, return_index=True,
+                                        return_counts=True)
+        per_block.append((uniq, start, counts, lr, lv))
+        if uniq.size:
+            c_max = max(c_max, uniq.size)
+            k_max = max(k_max, int(counts.max()))
+
+    c_cap = -(-c_max // capacity_multiple) * capacity_multiple
+    col_ids = np.zeros((num_blocks, c_cap), np.int32)
+    col_rows = np.zeros((num_blocks, c_cap, k_max), np.int32)
+    col_vals = np.zeros((num_blocks, c_cap, k_max), np.float32)
+    for d, (uniq, start, counts, lr, lv) in enumerate(per_block):
+        if not uniq.size:
+            continue
+        col_ids[d, :uniq.size] = uniq
+        slot_col = np.repeat(np.arange(uniq.size), counts)
+        slot_k = np.arange(lr.size) - np.repeat(start, counts)
+        col_rows[d, slot_col, slot_k] = lr
+        col_vals[d, slot_col, slot_k] = lv
+    return BlockEll(col_ids=col_ids, col_rows=col_rows, col_vals=col_vals,
+                    m=m, width=w, n=n)

@@ -1,4 +1,4 @@
-"""Local (per-block) SVD primitives.
+"""Local (per-block) SVD primitives, on either block representation.
 
 Two interchangeable local factorizations of a short-and-fat block
 ``A_blk (M x N_b)``, both returning ``(U, S)`` with U: (M, M), S: (M,)
@@ -12,14 +12,25 @@ sorted descending:
   the paper's dgesvd analogue).  More accurate, slower on TPU.
 
 The merge step needs only ``U @ diag(S)`` per block (the proxy panel).
+
+Representation dispatch: ``gram_stack`` / ``local_svd_gram_stack``
+accept either a dense (D, M, N_b) block stack or a
+``sparse.RepairedSparseBlocks`` (the sparse-native path).  The sparse
+gram is EXACT — ``sparse_gram_block`` expands
+``G = (E + R)(E + R)^T = G_E + C + C^T + G_R`` where E is the immutable
+ELL part (Pallas sparse_gram kernel or jnp oracle), R the <=1-entry-per-
+row repair side-band, and the cross/repair terms are nnz-proportional
+jnp contractions — a block is never densified to (M, N_b).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import sparse
 
 
 def gram(a_blk: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
@@ -29,6 +40,74 @@ def gram(a_blk: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
 
         return kops.blockgram(a_blk)
     return a_blk @ a_blk.T
+
+
+def sparse_gram_block(
+    col_ids: jnp.ndarray,
+    col_rows: jnp.ndarray,
+    col_vals: jnp.ndarray,
+    repair_cols: jnp.ndarray,
+    repair_mask: jnp.ndarray,
+    m: int,
+    *,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Exact (M, M) gram of one repaired sparse block, never densified.
+
+    With E the padded-ELL part and R the repair side-band (row j gains a
+    1 at local column repair_cols[j] iff repair_mask[j]):
+
+      G = E E^T  +  E R^T  +  (E R^T)^T  +  R R^T
+
+    * ``E E^T``  — Pallas sparse_gram kernel (use_kernel) or the (C, M)
+      stored-column panel contraction; C ~ nnz either way.
+    * ``E R^T [r, j] = E[r, c_j] * mask_j`` — one (M, C) x (C, M) matmul
+      against the stored-column match matrix (a repair may hit a column
+      E already stores; this is the cross term that an append-only ELL
+      would silently drop).
+    * ``R R^T [i, j] = mask_i mask_j [c_i == c_j]`` — two repairs hitting
+      the same column see each other.
+    """
+    panel = sparse.stored_col_panel(col_rows, col_vals, m)  # (C, M)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        g_e = kops.sparse_gram(col_rows, col_vals, m)
+    else:
+        g_e = panel.T @ panel
+    rmask = repair_mask.astype(jnp.float32)
+    match = (col_ids[:, None] == repair_cols[None, :]).astype(jnp.float32) \
+        * rmask[None, :]                                     # (C, M)
+    cross = panel.T @ match                                  # (M, M)
+    g_r = (repair_cols[:, None] == repair_cols[None, :]).astype(jnp.float32) \
+        * (rmask[:, None] * rmask[None, :])
+    return g_e + cross + cross.T + g_r
+
+
+BlockStack = Union[jnp.ndarray, "sparse.RepairedSparseBlocks"]
+
+
+def gram_stack(blocks: BlockStack, *, use_kernel: bool = False) -> jnp.ndarray:
+    """(D, M, M) grams of a block stack, dispatching on representation:
+    dense (D, M, N_b) array or sparse.RepairedSparseBlocks."""
+    if isinstance(blocks, sparse.RepairedSparseBlocks):
+        ell = blocks.ell
+
+        def one(ids, rows, vals, rc, rm):
+            return sparse_gram_block(ids, rows, vals, rc, rm, ell.m,
+                                     use_kernel=use_kernel)
+
+        return jax.vmap(one)(ell.col_ids, ell.col_rows, ell.col_vals,
+                             blocks.repair_cols, blocks.repair_mask)
+    return jax.vmap(lambda b: gram(b, use_kernel=use_kernel))(blocks)
+
+
+def local_svd_gram_stack(
+    blocks: BlockStack, *, use_kernel: bool = False
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(U (D, M, M), S (D, M)) via gram + eigh for either representation."""
+    grams = gram_stack(blocks, use_kernel=use_kernel)
+    return jax.vmap(eigh_to_svd)(grams)
 
 
 def eigh_to_svd(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -107,3 +186,27 @@ def right_vectors(
     smax = jnp.max(s)
     inv = jnp.where(s > rcond * smax, 1.0 / jnp.where(s == 0, 1.0, s), 0.0)
     return (a_blk.T @ u) * inv[None, :]
+
+
+def sparse_right_vectors(
+    col_ids: jnp.ndarray,
+    col_rows: jnp.ndarray,
+    col_vals: jnp.ndarray,
+    repair_cols: jnp.ndarray,
+    repair_mask: jnp.ndarray,
+    width: int,
+    u: jnp.ndarray,
+    s: jnp.ndarray,
+    *,
+    rcond: float = 1e-7,
+) -> jnp.ndarray:
+    """Sparse-native right_vectors: V_blk (W, M) for one repaired sparse
+    block.  A_blk^T @ U reduces to one (C, M) x (M, M) matmul over stored
+    columns scattered to their local ids, plus the repair rows of U."""
+    m = u.shape[0]
+    panel = sparse.stored_col_panel(col_rows, col_vals, m)   # (C, M)
+    atu = jnp.zeros((width, m), u.dtype).at[col_ids].add(panel @ u)
+    atu = atu.at[repair_cols].add(repair_mask[:, None] * u)
+    smax = jnp.max(s)
+    inv = jnp.where(s > rcond * smax, 1.0 / jnp.where(s == 0, 1.0, s), 0.0)
+    return atu * inv[None, :]

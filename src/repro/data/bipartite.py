@@ -1,6 +1,11 @@
 """Paper-style bipartite datasets (the kariyer.net job-candidate matrix
 is proprietary; this generator matches its published statistics: 539 jobs
-x 170897 candidates, heavy-tailed degree distribution, full row rank)."""
+x 170897 candidates, heavy-tailed degree distribution, full row rank).
+
+Provides the workload in all three representations the pipeline accepts:
+host COO (``paper_coo``), dense (``paper_matrix`` — densified once for
+the dense path), and the device-side blocked sparse container
+(``paper_block_ell`` — the sparse-native path; never densifies)."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,11 +14,20 @@ from repro.core import sparse
 from repro.configs.ranky_paper import RankyPaperConfig
 
 
-def paper_matrix(cfg: RankyPaperConfig) -> np.ndarray:
+def paper_coo(cfg: RankyPaperConfig) -> sparse.COOMatrix:
     coo = sparse.random_bipartite(cfg.rows, cfg.cols, cfg.density,
                                   seed=cfg.seed, power_law=True)
-    coo = sparse.ensure_full_row_rank(coo, seed=cfg.seed)
-    return coo.todense()
+    return sparse.ensure_full_row_rank(coo, seed=cfg.seed)
+
+
+def paper_matrix(cfg: RankyPaperConfig) -> np.ndarray:
+    return paper_coo(cfg).todense()
+
+
+def paper_block_ell(cfg: RankyPaperConfig, num_blocks: int) -> sparse.BlockEll:
+    """The paper matrix as a device-side blocked sparse container, ready
+    for ranky.ranky_svd / distributed_ranky_svd without densification."""
+    return sparse.block_ell_from_coo(paper_coo(cfg), num_blocks)
 
 
 def lonely_row_stats(a: np.ndarray, num_blocks: int) -> dict:

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels import blockgram as _bg
 from repro.kernels import flash_attention as _fa
+from repro.kernels import sparse_gram as _sg
 from repro.kernels import ssd_scan as _ssd
 
 
@@ -51,6 +52,33 @@ def blockgram(a_blk: jnp.ndarray, *, block_n: int = 512) -> jnp.ndarray:
     block_n = min(block_n, max(128, a_pad.shape[1]))
     a_pad, _ = _pad_axis(a_pad, 1, block_n)
     g = _bg.blockgram(a_pad, block_n=block_n, interpret=(mode == "interpret"))
+    return g[:m, :m] if pad_m else g
+
+
+def sparse_gram(
+    col_rows: jnp.ndarray,
+    col_vals: jnp.ndarray,
+    m: int,
+    *,
+    block_c: int = 512,
+) -> jnp.ndarray:
+    """G = E @ E^T ((M, M) f32) from one block's padded-ELL arrays
+    (C, K) — see core/sparse.py:BlockEll.  Pads M to the 8-sublane grid,
+    K to 8 sublanes and C to block_c lanes; padding slots carry val 0 so
+    they are inert in both the kernel and the oracle."""
+    mode = _mode()
+    if mode == "ref":
+        return _ref.sparse_gram(col_rows, col_vals, m)
+    rows_t = col_rows.astype(jnp.int32).T  # (K, C): lane dim = stored cols
+    vals_t = col_vals.astype(jnp.float32).T
+    rows_t, _ = _pad_axis(rows_t, 0, 8)
+    vals_t, _ = _pad_axis(vals_t, 0, 8)
+    block_c = min(block_c, max(128, rows_t.shape[1]))
+    rows_t, _ = _pad_axis(rows_t, 1, block_c)
+    vals_t, _ = _pad_axis(vals_t, 1, block_c)
+    pad_m = (-m) % 8
+    g = _sg.sparse_gram(rows_t, vals_t, m + pad_m, block_c=block_c,
+                        interpret=(mode == "interpret"))
     return g[:m, :m] if pad_m else g
 
 

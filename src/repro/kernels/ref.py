@@ -22,6 +22,28 @@ def blockgram(a_blk: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# sparse_gram: G = E @ E^T from a padded-ELL sparse block (Ranky sparse path)
+# ---------------------------------------------------------------------------
+
+def sparse_gram(
+    col_rows: jnp.ndarray, col_vals: jnp.ndarray, m: int
+) -> jnp.ndarray:
+    """(C, K) padded-ELL slots -> (M, M) gram in f32.
+
+    Scatters the slots into the (C, M) stored-column panel and contracts
+    over stored columns: G[r1, r2] = sum_c P[c, r1] P[c, r2].  Work and
+    memory are nnz-proportional (C ~ stored columns), never M x W.
+    Padding slots must carry val == 0 (the container builder guarantees
+    it); duplicate (column, row) slots accumulate, matching the kernel.
+    """
+    c = col_rows.shape[0]
+    p = jnp.zeros((c, m), jnp.float32).at[
+        jnp.arange(c)[:, None], col_rows
+    ].add(col_vals.astype(jnp.float32))
+    return p.T @ p
+
+
+# ---------------------------------------------------------------------------
 # flash_attention: fused causal/local GQA attention with optional softcap
 # ---------------------------------------------------------------------------
 

@@ -19,10 +19,7 @@ def _sharded_kv_update(cache: jnp.ndarray, new: jnp.ndarray,
     all-gather a traced-index dynamic_update_slice provokes under GSPMD:
     shard_map the update — only the shard owning position ``cache_len``
     modifies its local slab, in place."""
-    try:
-        shard_map = jax.shard_map
-    except AttributeError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map  # type: ignore
+    from repro.compat import shard_map_nocheck as shard_map
 
     axes = ctx.axes("seq_shard")
     if ctx.mesh is None or not axes:
@@ -48,7 +45,7 @@ def _sharded_kv_update(cache: jnp.ndarray, new: jnp.ndarray,
     return shard_map(
         upd, mesh=ctx.mesh,
         in_specs=(spec, P(None, None, None, None), P()),
-        out_specs=spec, check_vma=False,
+        out_specs=spec,
     )(cache, new, cache_len)
 
 

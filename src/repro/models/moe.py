@@ -26,10 +26,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models.layers import ShardCtx, activate
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from repro.compat import shard_map_nocheck as shard_map
 
 
 def _capacity(cfg: ModelConfig, t_local: int) -> int:
@@ -159,6 +156,5 @@ def moe_block(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
         inner, mesh=mesh,
         in_specs=(x_spec, P(None, None), ew_spec, ew_spec, ew_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     return y, aux

@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels import blockgram as bg
 from repro.kernels import flash_attention as fa
+from repro.kernels import sparse_gram as sg
 from repro.kernels import ssd_scan as ssd
 from repro.kernels import ops
 
@@ -45,6 +46,57 @@ def test_blockgram_sparse_zeros():
     x = jnp.zeros((16, 512), jnp.float32)
     got = bg.blockgram(x, block_n=256, interpret=True)
     assert np.all(np.asarray(got) == 0)
+
+
+# ---------------------------------------------------------------------------
+# sparse_gram (padded-ELL gram; the sparse-native twin of blockgram)
+# ---------------------------------------------------------------------------
+
+def _random_ell(m, c, k, seed=0, zero_frac=0.3):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, size=(c, k)).astype(np.int32)
+    vals = rng.standard_normal((c, k)).astype(np.float32)
+    vals[rng.random((c, k)) < zero_frac] = 0.0  # padding slots
+    return jnp.asarray(rows), jnp.asarray(vals)
+
+
+@pytest.mark.parametrize("m", [8, 64, 128])
+@pytest.mark.parametrize("c", [128, 512])
+@pytest.mark.parametrize("k", [1, 8])
+def test_sparse_gram_sweep(m, c, k):
+    rows, vals = _random_ell(m, c, k)
+    got = sg.sparse_gram(rows.T, vals.T, m, block_c=128, interpret=True)
+    want = ref.sparse_gram(rows, vals, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_sparse_gram_ops_padding(monkeypatch):
+    # M not 8-aligned, K not sublane-aligned, C not block-aligned -> ops
+    # pads losslessly around the actual kernel (interpret mode).
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    rows, vals = _random_ell(13, 60, 3, seed=1)
+    got = ops.sparse_gram(rows, vals, 13)
+    want = ref.sparse_gram(rows, vals, 13)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-4)
+    assert got.shape == (13, 13)
+
+
+def test_sparse_gram_matches_dense_blockgram():
+    """Container-built ELL gram == dense gram of the same block."""
+    from repro.core import sparse as spr
+
+    coo = spr.ensure_full_row_rank(
+        spr.random_bipartite(24, 2000, 0.005, seed=2), seed=2)
+    ell = spr.block_ell_from_coo(coo, 4)
+    a = spr.pad_to_block_multiple(coo.todense(), 4)
+    for d in range(4):
+        got = ops.sparse_gram(jnp.asarray(ell.col_rows[d]),
+                              jnp.asarray(ell.col_vals[d]), ell.m)
+        blk = a[:, d * ell.width:(d + 1) * ell.width]
+        np.testing.assert_allclose(np.asarray(got), blk @ blk.T,
+                                   rtol=1e-5, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------
