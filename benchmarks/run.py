@@ -1,18 +1,21 @@
 """Benchmark entry point: one function per paper table + beyond-paper
 comparisons + LM micro-benches.  Prints ``name,us_per_call,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--skip-lm]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--skip-lm] \
+      [--only SECTION]
+
+Sections: paper, rank_problem, merge, sparse, randomized, lm.
+``--only SECTION`` runs just that section (e.g. the CI smoke leg uses
+``--only randomized``).
 """
 from __future__ import annotations
 
 import sys
 
+SECTIONS = ("paper", "rank_problem", "merge", "sparse", "randomized", "lm")
 
-def main() -> None:
-    full = "--full" in sys.argv
-    skip_lm = "--skip-lm" in sys.argv
-    rows = []
 
+def _run_paper(rows, full: bool) -> None:
     from benchmarks import paper_tables
     kw = ({"cols": 170_897, "density": 5e-4,
            "blocks": (2, 3, 4, 8, 10, 16, 32, 64, 128)} if full else {})
@@ -23,6 +26,8 @@ def main() -> None:
                          f"e_sigma={r['e_sigma']:.3e};e_u={r['e_u']:.3e};"
                          f"lonely={r['lonely_rows']}"))
 
+
+def _run_rank_problem(rows, full: bool) -> None:
     from benchmarks import rank_problem
     print("# rank problem (paper motivation, emulated undetermined tails)",
           flush=True)
@@ -32,6 +37,8 @@ def main() -> None:
                      f"e_sigma={r['e_sigma']:.3e};e_u={r['e_u']:.3e};"
                      f"unfixed={r['unfixed_lonely']}"))
 
+
+def _run_merge(rows, full: bool) -> None:
     from benchmarks import merge_modes
     print("# merge modes (beyond-paper)", flush=True)
     for r in merge_modes.run():
@@ -39,17 +46,58 @@ def main() -> None:
                      r["seconds"] * 1e6,
                      f"e_sigma={r['e_sigma']:.3e};comm={r['comm_bytes']}"))
 
+
+def _run_sparse(rows, full: bool) -> None:
     from benchmarks import sparse_path
     print("# sparse vs dense execution path", flush=True)
     for r in sparse_path.run(**({"cols": 170_897} if full else {})):
         rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
 
-    if not skip_lm:
-        from benchmarks import lm_step
-        print("# lm steps (reduced configs)", flush=True)
-        for r in lm_step.run():
-            rows.append((f"train_{r['arch']}", r["train_us"], ""))
-            rows.append((f"decode_{r['arch']}", r["decode_us"], ""))
+
+def _run_randomized(rows, full: bool) -> None:
+    from benchmarks import randomized
+    print("# randomized rank-k sketch vs exact gram (tall-row regime)",
+          flush=True)
+    for r in randomized.run(**({"ms": (539, 2048, 8192, 32768, 131072)}
+                               if full else {})):
+        rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
+
+
+def _run_lm(rows, full: bool) -> None:
+    from benchmarks import lm_step
+    print("# lm steps (reduced configs)", flush=True)
+    for r in lm_step.run():
+        rows.append((f"train_{r['arch']}", r["train_us"], ""))
+        rows.append((f"decode_{r['arch']}", r["decode_us"], ""))
+
+
+_RUNNERS = {
+    "paper": _run_paper,
+    "rank_problem": _run_rank_problem,
+    "merge": _run_merge,
+    "sparse": _run_sparse,
+    "randomized": _run_randomized,
+    "lm": _run_lm,
+}
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    full = "--full" in argv
+    skip_lm = "--skip-lm" in argv
+    only = None
+    if "--only" in argv:
+        idx = argv.index("--only") + 1
+        only = argv[idx] if idx < len(argv) else None
+        if only not in SECTIONS:
+            raise SystemExit(
+                f"--only {only!r}: unknown section; want one of {SECTIONS}")
+
+    sections = [only] if only else [
+        s for s in SECTIONS if not (s == "lm" and skip_lm)]
+    rows = []
+    for section in sections:
+        _RUNNERS[section](rows, full)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:

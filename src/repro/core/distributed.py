@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import svd as lsvd
+from repro.core import randomized
 from repro.core import ranky
 from repro.core import sparse
 
@@ -82,8 +83,6 @@ def _merge_proxy_over(panel: jnp.ndarray, axes: Sequence[str]):
     for ax in reversed(axes):
         panels = jax.lax.all_gather(panels, ax, tiled=False)
         panels = panels.reshape((-1,) + panel.shape)
-    if panels.ndim == 2:
-        panels = panels[None]
     return lsvd.merge_panels_svd(panels)
 
 
@@ -98,8 +97,22 @@ def _svd_shard_fn(
     hierarchical: bool,
     use_kernel: bool,
     want_right: bool,
+    rank: Optional[int],
+    oversample: int,
+    power_iters: int,
 ):
     blk = _local_repair(a_blk, method, key, axes)
+
+    if rank is not None:
+        # Randomized truncated path: the (L, M) pullback / (L, L) sketch
+        # gram are the only collectives (psum over the block axes); the
+        # merge modes do not apply.  Omega is drawn from the UN-folded
+        # key so it is replicated across the mesh.
+        return randomized.randomized_tail_over(
+            lambda om: randomized.sketch_block_dense(om, blk),
+            lambda g: randomized.pullback_block_dense(g, blk),
+            axes, blk.shape[0], rank=rank, oversample=oversample,
+            power_iters=power_iters, key=key, want_right=want_right)
 
     if merge_mode == "gram":
         # Beyond-paper: one M x M all-reduce; eigh redundantly everywhere.
@@ -158,6 +171,9 @@ def _sparse_svd_shard_fn(
     hierarchical: bool,
     use_kernel: bool,
     want_right: bool,
+    rank: Optional[int],
+    oversample: int,
+    power_iters: int,
 ):
     """Per-device body for the sparse container: each device owns one
     column block's ELL arrays (leading block axis sharded to size 1).
@@ -166,6 +182,16 @@ def _sparse_svd_shard_fn(
     ids, rows, vals = ids[0], rows[0], vals[0]
     rc, rm = _sparse_local_repair(ids, rows, vals, method, key, axes,
                                   m, width)
+
+    if rank is not None:
+        return randomized.randomized_tail_over(
+            lambda om: randomized.sketch_block_sparse(
+                om, ids, rows, vals, rc, rm, width),
+            lambda g: randomized.pullback_block_sparse(
+                g, ids, rows, vals, rc, rm, m),
+            axes, m, rank=rank, oversample=oversample,
+            power_iters=power_iters, key=key, want_right=want_right)
+
     g_local = lsvd.sparse_gram_block(ids, rows, vals, rc, rm, m,
                                      use_kernel=use_kernel)
 
@@ -199,6 +225,9 @@ def distributed_ranky_svd(
     hierarchical: bool = False,
     use_kernel: bool = False,
     want_right: bool = False,
+    rank: Optional[int] = None,
+    oversample: int = 8,
+    power_iters: int = 2,
     key: Optional[jax.Array] = None,
 ):
     """Distributed Ranky SVD of a column-sharded short-and-fat matrix.
@@ -216,19 +245,25 @@ def distributed_ranky_svd(
         tree merge.
       method: one of ranky.METHODS.
       merge_mode: "proxy" (paper) or "gram" (beyond-paper all-reduce).
-      want_right: also return this device's shard of V (N/D, M),
+      want_right: also return this device's shard of V — (N/D, M) for
+        the exact paths, (N/D, k) for the randomized path —
         column-sharded like the input.
+      rank: rank=k switches to the randomized truncated sketch path
+        (core/randomized.py): rank repair still runs per device, then
+        the only collectives are a (k+oversample, M) psum per power
+        pass plus one (L, L) psum — no proxy gather, no M x M gram.
+        This is the tall-row-regime path; ``merge_mode`` does not apply.
 
     Returns (U, S) replicated — or (U, S, V) with V column-sharded.
     """
     axes = tuple(block_axes)
     if key is None:
         key = jax.random.PRNGKey(0)
+    d_total = 1
+    for ax in axes:
+        d_total *= mesh.shape[ax]
 
     if isinstance(a, sparse.BlockEll):
-        d_total = 1
-        for ax in axes:
-            d_total *= mesh.shape[ax]
         if a.num_blocks != d_total:
             raise ValueError(
                 f"BlockEll has {a.num_blocks} blocks; mesh axes {axes} "
@@ -248,6 +283,9 @@ def distributed_ranky_svd(
             hierarchical=hierarchical,
             use_kernel=use_kernel,
             want_right=want_right,
+            rank=rank,
+            oversample=oversample,
+            power_iters=power_iters,
         )
         sharded = shard_map(fn, mesh=mesh, in_specs=in_spec,
                             out_specs=out_spec)
@@ -257,6 +295,14 @@ def distributed_ranky_svd(
         vals = jax.device_put(jnp.asarray(a.col_vals), blk_sh)
         return jax.jit(sharded)(ids, rows, vals, key)
 
+    if a.shape[1] % d_total:
+        # Same friendly error as the BlockEll branch — without it the
+        # shard_map call fails with an opaque XLA sharding error.
+        raise ValueError(
+            f"dense a has N={a.shape[1]} columns; mesh axes {axes} give "
+            f"{d_total} devices and N must divide evenly (pad with "
+            f"sparse.pad_to_block_multiple first — zero columns change "
+            f"nothing about U or S)")
     in_spec = (P(None, axes), P())
     out_spec = (P(), P()) if not want_right else (P(), P(), P(axes, None))
 
@@ -269,6 +315,9 @@ def distributed_ranky_svd(
         hierarchical=hierarchical,
         use_kernel=use_kernel,
         want_right=want_right,
+        rank=rank,
+        oversample=oversample,
+        power_iters=power_iters,
     )
     sharded = shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec)
     a = jax.device_put(a, NamedSharding(mesh, P(None, axes)))

@@ -46,6 +46,9 @@ def hierarchical_ranky_svd(
     fanout: int = 4,
     rank: Optional[int] = None,
     method: str = "neighbor_random",
+    sketch: bool = False,
+    oversample: int = 8,
+    power_iters: int = 2,
     key: Optional[jax.Array] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Tree-merged Ranky SVD.  Returns (U, S) with S of length ``rank``
@@ -53,9 +56,19 @@ def hierarchical_ranky_svd(
     algorithm whose failure on rank-deficient blocks motivates Ranky).
 
     ``a`` is a dense (M, N) array (N must divide by num_blocks) or a
-    sparse.BlockEll container (sparse-native leaves: gram + eigh per
-    block, no block ever densified) — the same shared prologue as
-    ranky.ranky_svd handles both.
+    sparse.BlockEll container (sparse-native leaves, no block ever
+    densified) — the same shared prologue as ranky.ranky_svd handles
+    both.
+
+    ``sketch=True`` replaces the exact gram+eigh leaves with randomized
+    truncated rank-``rank`` leaf panels (core/randomized.py): each
+    block's (M, r) panel comes from a per-block (r+oversample)-row
+    sketch in O(nnz_d * r) instead of the O(M^2 W + M^3) gram+eigh, and
+    the existing tree merge consumes the panels unchanged.  This is the
+    tall-row-regime form of the Iwen & Ong incremental algorithm — and
+    makes Ranky's repair MORE load-bearing: a rank-deficient block's
+    lonely rows carry no sketch weight, so the truncated leaves lose
+    their components unrecoverably unless repair runs first.
     """
     from repro.core import sparse
 
@@ -65,8 +78,15 @@ def hierarchical_ranky_svd(
     blocks = ranky.split_and_repair(a, num_blocks, method, key)
 
     # Level 0: per-block factorization -> (D, M, r) truncated proxy panels.
-    us, ss = lsvd.local_svd_gram_stack(blocks)
-    panels = (us * ss[:, None, :])[:, :, :r]
+    if sketch:
+        from repro.core import randomized
+
+        panels = randomized.block_truncated_panels(
+            blocks, rank=r, oversample=oversample,
+            power_iters=power_iters, key=key)
+    else:
+        us, ss = lsvd.local_svd_gram_stack(blocks)
+        panels = (us * ss[:, None, :])[:, :, :r]
 
     # Tree merge, groups of ``fanout`` per level.
     while panels.shape[0] > 1:

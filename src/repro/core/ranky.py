@@ -350,7 +350,8 @@ def split_and_repair(
 
 
 @partial(jax.jit, static_argnames=("num_blocks", "method", "local_mode",
-                                   "merge_mode", "undetermined_tail"))
+                                   "merge_mode", "undetermined_tail",
+                                   "rank", "oversample", "power_iters"))
 def ranky_svd(
     a: BlockInput,
     *,
@@ -359,6 +360,9 @@ def ranky_svd(
     local_mode: str = "gram",  # "gram" (TPU-native) | "svd" (paper dgesvd)
     merge_mode: str = "proxy",  # "proxy" (paper) | "gram" (beyond-paper)
     undetermined_tail: bool = False,
+    rank: Optional[int] = None,
+    oversample: int = 8,
+    power_iters: int = 2,
     key: Optional[jax.Array] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One-level Ranky distributed SVD, single host: returns (U, S) of A.
@@ -369,6 +373,14 @@ def ranky_svd(
     which case the whole pipeline is sparse-native (gram local mode only;
     no (M, N/D) block is ever materialized).
 
+    ``rank=k`` switches to the randomized truncated path
+    (core/randomized.py): rank repair still runs first, then the top-k
+    (U (M, k), S (k,)) come from a (k+oversample)-row sketch with
+    ``power_iters`` re-orthonormalized power passes — O(nnz * k) per
+    block instead of the O(M^2) gram, the only path viable in the
+    tall-row regime.  ``local_mode``/``merge_mode`` do not apply to the
+    sketch (it replaces both the local factorization and the merge).
+
     ``undetermined_tail`` emulates the rank problem the paper fixes: a
     rank-deficient block's SVD has zero singular values whose left-vector
     columns are numerically UNDETERMINED (the reference C implementation
@@ -376,15 +388,35 @@ def ranky_svd(
     so the dead columns carry whatever noise the factorization left
     there).  With the flag on, dead panel columns are filled with
     sqrt(eps)-scale noise — the exact failure Ranky's checkers prevent by
-    making every block full-rank.  See benchmarks/rank_problem.py.
+    making every block full-rank.  See benchmarks/rank_problem.py.  The
+    emulation lives in the proxy-panel merge: requesting it under
+    ``merge_mode="gram"`` or ``rank=k`` (neither builds panels) is an
+    error rather than a silent no-op.
     """
     from repro.core import svd as lsvd
 
     is_sparse = isinstance(a, sparse.BlockEll)
+    if undetermined_tail and merge_mode == "gram":
+        raise ValueError(
+            "undetermined_tail emulates noise in proxy PANEL columns; the "
+            "gram merge never builds panels, so the flag would be silently "
+            "ignored — use merge_mode='proxy'")
+    if undetermined_tail and rank is not None:
+        raise ValueError(
+            "undetermined_tail emulates noise in proxy PANEL columns; the "
+            "randomized rank-k path never builds panels, so the flag would "
+            "be silently ignored — drop rank= to use the proxy merge")
     if key is None:
         key = jax.random.PRNGKey(0)
 
     blocks = split_and_repair(a, num_blocks, method, key)
+
+    if rank is not None:
+        from repro.core import randomized
+
+        return randomized.randomized_svd_blocks(
+            blocks, rank=rank, oversample=oversample,
+            power_iters=power_iters, key=key)
 
     if merge_mode == "gram":
         return lsvd.merge_grams_eigh(lsvd.gram_stack(blocks))

@@ -56,8 +56,12 @@ class COOMatrix:
         return int(self.rows.shape[0])
 
     def todense(self) -> np.ndarray:
+        # Duplicate (row, col) triples ACCUMULATE — the same multigraph
+        # semantics as BlockEll.todense_blocks / stored_col_panel, so the
+        # dense and sparse execution paths always factor the same matrix
+        # (block_ell_from_coo coalesces duplicates by summing).
         out = np.zeros(self.shape, dtype=np.float32)
-        out[self.rows, self.cols] = self.vals
+        np.add.at(out, (self.rows, self.cols), self.vals)
         return out
 
     def density(self) -> float:
@@ -76,10 +80,12 @@ def random_bipartite(
     """Generate a sparse bipartite adjacency matrix like the paper's dataset.
 
     The paper's matrix is a 539 x 170897 job-candidate bipartite graph.
-    Real bipartite interaction graphs have heavy-tailed column degrees
-    (most candidates apply to few jobs); ``power_law=True`` reproduces
-    this, which is what creates *lonely rows* once the matrix is split
-    column-wise into blocks.
+    Real bipartite interaction graphs are popularity-skewed;
+    ``power_law=True`` draws heavy-tailed *row* popularity (a few jobs
+    receive most applications) with columns chosen uniformly.  Unpopular
+    rows then own very few entries, so a column block can easily miss
+    them entirely — exactly the *lonely rows* that appear once the
+    matrix is split column-wise into blocks.
     """
     rng = np.random.default_rng(seed)
     nnz_target = max(1, int(round(m * n * density)))
@@ -312,8 +318,23 @@ def block_ell_from_coo(
     Capacity is sized to the data: C = max stored columns per block
     (rounded up to ``capacity_multiple`` for tile-friendly shapes), K =
     max nonzeros in any single column.  Padding slots carry val 0.
+
+    Duplicate (row, col) triples are coalesced here by SUMMING their
+    values.  The device consumers (todense_blocks / stored_col_panel /
+    the sparse_gram kernel) all scatter-ADD, so summed coalescing is an
+    identity for them — and COOMatrix.todense accumulates the same way,
+    keeping the sparse and dense paths on the same matrix even for
+    multigraph inputs.
     """
     m, n = coo.shape
+    pair = coo.rows.astype(np.int64) * n + coo.cols.astype(np.int64)
+    uniq_pair, inv = np.unique(pair, return_inverse=True)
+    if uniq_pair.size != pair.size:
+        summed = np.zeros(uniq_pair.size, np.float32)
+        np.add.at(summed, inv, coo.vals)
+        coo = COOMatrix(rows=(uniq_pair // n).astype(np.int32),
+                        cols=(uniq_pair % n).astype(np.int32),
+                        vals=summed, shape=coo.shape)
     w = block_width(n, num_blocks)
     blk_of = coo.cols // w
     local = (coo.cols % w).astype(np.int64)

@@ -7,6 +7,7 @@ f32 accumulation).
 """
 from __future__ import annotations
 
+import math
 import os
 from typing import Optional, Tuple
 
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels import blockgram as _bg
 from repro.kernels import flash_attention as _fa
+from repro.kernels import sketch_panel as _sp
 from repro.kernels import sparse_gram as _sg
 from repro.kernels import ssd_scan as _ssd
 
@@ -55,6 +57,23 @@ def blockgram(a_blk: jnp.ndarray, *, block_n: int = 512) -> jnp.ndarray:
     return g[:m, :m] if pad_m else g
 
 
+def _ell_tiles(
+    col_rows: jnp.ndarray, col_vals: jnp.ndarray, block_c: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Shared ELL kernel layout: transpose (C, K) -> (K, C) so the lane
+    dim is stored columns, pad K to 8 sublanes and C to block_c lanes
+    (clamped to the data).  Padding slots carry val 0 / row 0 and are
+    inert.  Returns (rows_t, vals_t, block_c)."""
+    rows_t = col_rows.astype(jnp.int32).T
+    vals_t = col_vals.astype(jnp.float32).T
+    rows_t, _ = _pad_axis(rows_t, 0, 8)
+    vals_t, _ = _pad_axis(vals_t, 0, 8)
+    block_c = min(block_c, max(128, rows_t.shape[1]))
+    rows_t, _ = _pad_axis(rows_t, 1, block_c)
+    vals_t, _ = _pad_axis(vals_t, 1, block_c)
+    return rows_t, vals_t, block_c
+
+
 def sparse_gram(
     col_rows: jnp.ndarray,
     col_vals: jnp.ndarray,
@@ -69,17 +88,39 @@ def sparse_gram(
     mode = _mode()
     if mode == "ref":
         return _ref.sparse_gram(col_rows, col_vals, m)
-    rows_t = col_rows.astype(jnp.int32).T  # (K, C): lane dim = stored cols
-    vals_t = col_vals.astype(jnp.float32).T
-    rows_t, _ = _pad_axis(rows_t, 0, 8)
-    vals_t, _ = _pad_axis(vals_t, 0, 8)
-    block_c = min(block_c, max(128, rows_t.shape[1]))
-    rows_t, _ = _pad_axis(rows_t, 1, block_c)
-    vals_t, _ = _pad_axis(vals_t, 1, block_c)
+    rows_t, vals_t, block_c = _ell_tiles(col_rows, col_vals, block_c)
     pad_m = (-m) % 8
     g = _sg.sparse_gram(rows_t, vals_t, m + pad_m, block_c=block_c,
                         interpret=(mode == "interpret"))
     return g[:m, :m] if pad_m else g
+
+
+def sketch_panel(
+    omega: jnp.ndarray,
+    col_rows: jnp.ndarray,
+    col_vals: jnp.ndarray,
+    *,
+    block_c: int = 512,
+    block_m: int = 512,
+) -> jnp.ndarray:
+    """S = Omega @ E ((L, C) f32) — the (L, M) test matrix contracted
+    against one block's padded-ELL arrays (C, K), restricted to stored
+    columns (see core/randomized.py; callers scatter through col_ids).
+    Pads L to the 8-sublane grid, M to block_m lanes, K to 8 sublanes
+    and C to block_c lanes; padding slots carry val 0 / row 0 so they
+    are inert in both the kernel and the oracle."""
+    mode = _mode()
+    if mode == "ref":
+        return _ref.sketch_panel(omega, col_rows, col_vals)
+    l, c = omega.shape[0], col_rows.shape[0]
+    om = omega.astype(jnp.float32)
+    om, _ = _pad_axis(om, 0, 8)
+    block_m = min(block_m, max(128, om.shape[1]))
+    om, _ = _pad_axis(om, 1, block_m)
+    rows_t, vals_t, block_c = _ell_tiles(col_rows, col_vals, block_c)
+    out = _sp.sketch_panel(om, rows_t, vals_t, block_c=block_c,
+                           block_m=block_m, interpret=(mode == "interpret"))
+    return out[:l, :c]
 
 
 def flash_attention(
@@ -109,9 +150,18 @@ def flash_attention(
             q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
         )
     if need_pad:
-        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pq), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        # Q and KV must be padded to one COMMON length aligned to BOTH
+        # block sizes: the kernel right-aligns queries by (sk - sq), so
+        # unequal pads (e.g. Q by pq, KV by pk) would shift every real
+        # query's position and mis-mask real rows whenever
+        # block_q != block_k.  Equal padding keeps the offset at 0 and
+        # the padded keys strictly in the future of every real query,
+        # where causality masks them.
+        step = block_q * block_k // math.gcd(block_q, block_k)
+        target = -(-sq // step) * step
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, target - sq), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, target - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, target - sk), (0, 0)))
     out = _fa.flash_attention(
         q, k, v,
         causal=causal, window=window, softcap=softcap, scale=scale,

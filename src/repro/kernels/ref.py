@@ -44,6 +44,26 @@ def sparse_gram(
 
 
 # ---------------------------------------------------------------------------
+# sketch_panel: S = Omega @ E over stored columns (randomized range finder)
+# ---------------------------------------------------------------------------
+
+def sketch_panel(
+    omega: jnp.ndarray, col_rows: jnp.ndarray, col_vals: jnp.ndarray
+) -> jnp.ndarray:
+    """(L, M) test matrix x (C, K) padded-ELL slots -> (L, C) panel.
+
+    out[l, c] = sum_k omega[l, rows[c, k]] * vals[c, k] — the sketch
+    ``Omega @ E`` of one sparse block restricted to its stored columns
+    (callers scatter to (L, W) through col_ids).  Computed as an O(nnz*L)
+    gather-and-reduce: no (M, W) or (C, M) intermediate, so it stays
+    cheap even in the tall-row regime where M >> C.  Padding slots carry
+    val == 0 and are inert; duplicate (column, row) slots accumulate.
+    """
+    gathered = jnp.take(omega.astype(jnp.float32), col_rows, axis=1)  # (L, C, K)
+    return jnp.sum(gathered * col_vals.astype(jnp.float32)[None], axis=-1)
+
+
+# ---------------------------------------------------------------------------
 # flash_attention: fused causal/local GQA attention with optional softcap
 # ---------------------------------------------------------------------------
 

@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels import blockgram as bg
 from repro.kernels import flash_attention as fa
+from repro.kernels import sketch_panel as sp
 from repro.kernels import sparse_gram as sg
 from repro.kernels import ssd_scan as ssd
 from repro.kernels import ops
@@ -100,6 +101,57 @@ def test_sparse_gram_matches_dense_blockgram():
 
 
 # ---------------------------------------------------------------------------
+# sketch_panel (randomized range finder: Omega @ E over stored columns)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [128, 256])
+@pytest.mark.parametrize("l", [8, 16])
+@pytest.mark.parametrize("c", [128, 512])
+@pytest.mark.parametrize("k", [1, 8])
+def test_sketch_panel_sweep(m, l, c, k):
+    rows, vals = _random_ell(m, c, k)
+    omega = jax.random.normal(KEY, (l, m), jnp.float32)
+    got = sp.sketch_panel(omega, rows.T, vals.T, block_c=128, block_m=128,
+                          interpret=True)
+    want = ref.sketch_panel(omega, rows, vals)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_sketch_panel_ops_padding(monkeypatch):
+    # L not sublane-aligned, M not block-aligned, K/C unaligned -> ops
+    # pads losslessly around the actual kernel (interpret mode).
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    rows, vals = _random_ell(13, 60, 3, seed=1)
+    omega = jax.random.normal(KEY, (5, 13), jnp.float32)
+    got = ops.sketch_panel(omega, rows, vals)
+    want = ref.sketch_panel(omega, rows, vals)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-4)
+    assert got.shape == (5, 60)
+
+
+def test_sketch_panel_matches_dense_contraction():
+    """Container-built ELL sketch == Omega @ dense block, per block."""
+    from repro.core import sparse as spr
+
+    coo = spr.ensure_full_row_rank(
+        spr.random_bipartite(24, 2000, 0.005, seed=2), seed=2)
+    ell = spr.block_ell_from_coo(coo, 4)
+    a = spr.pad_to_block_multiple(coo.todense(), 4)
+    omega = jax.random.normal(KEY, (6, 24), jnp.float32)
+    for d in range(4):
+        panel = ops.sketch_panel(omega, jnp.asarray(ell.col_rows[d]),
+                                 jnp.asarray(ell.col_vals[d]))
+        got = np.zeros((6, ell.width), np.float32)
+        np.add.at(got, (slice(None), np.asarray(ell.col_ids[d])),
+                  np.asarray(panel))
+        blk = a[:, d * ell.width:(d + 1) * ell.width]
+        np.testing.assert_allclose(got, np.asarray(omega) @ blk,
+                                   rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 
@@ -160,6 +212,27 @@ def test_flash_ops_unaligned_padding():
     got = ops.flash_attention(q, k, v, block_q=64, block_k=64)
     want = ref.flash_attention(q, k, v)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("bq,bk,s", [(64, 128, 150), (64, 128, 100),
+                                     (128, 64, 100)])
+def test_flash_ops_padding_blockq_ne_blockk(monkeypatch, bq, bk, s):
+    """Regression: ops used to pad K and V by the QUERY pad pq instead of
+    aligning to block_k — with block_q=64, block_k=128 and causal
+    sq == sk == 150 the kernel either rejected the padded KV length or,
+    padded unequally, shifted the right-alignment and mis-masked real
+    rows.  Both Q and KV must land on one common length aligned to both
+    block sizes.  Interpret mode so the actual kernel body runs."""
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, s, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, s, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, s, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention(q, k, v)
+    assert got.shape == q.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,32 @@ def test_block_ell_roundtrip(num_blocks):
     assert ell.padded_shape == want.shape
 
 
+def test_coo_duplicates_dense_and_sparse_agree():
+    """Regression: duplicate (row, col) triples used to diverge —
+    COOMatrix.todense assigned (last write wins) while the BlockEll
+    consumers scatter-ADD, so the sparse and dense paths factored
+    DIFFERENT matrices.  Both now accumulate (block_ell_from_coo
+    coalesces duplicates by summing) and must factor the same matrix."""
+    coo = sparse.COOMatrix(
+        rows=np.asarray([0, 0, 1, 0, 2, 2], np.int32),
+        cols=np.asarray([1, 1, 5, 1, 9, 9], np.int32),
+        vals=np.asarray([1.0, 2.0, 3.0, 0.5, 1.0, 1.0], np.float32),
+        shape=(3, 12))
+    dense = coo.todense()
+    assert dense[0, 1] == 3.5 and dense[2, 9] == 2.0  # summed, not last
+    for num_blocks in (1, 3):
+        ell = sparse.block_ell_from_coo(coo, num_blocks)
+        want = sparse.pad_to_block_multiple(dense, num_blocks)
+        np.testing.assert_array_equal(np.asarray(ell.todense()), want)
+    # and the two pipelines factor the same matrix
+    ell = sparse.block_ell_from_coo(coo, 3)
+    s_true = np.linalg.svd(sparse.pad_to_block_multiple(dense, 3),
+                           compute_uv=False)
+    _, s = ranky.ranky_svd(ell, num_blocks=3, method="none",
+                           merge_mode="gram")
+    np.testing.assert_allclose(np.asarray(s), s_true, rtol=1e-4, atol=1e-4)
+
+
 def test_block_bounds_host_device_agree():
     """The one splitting convention: host block_col_bounds slices exactly
     the device blocks (pad_to_block_multiple + equal reshape), with only
