@@ -1,18 +1,42 @@
 """Benchmark entry point: one function per paper table + beyond-paper
-comparisons + LM micro-benches.  Prints ``name,us_per_call,derived`` CSV.
+comparisons + LM micro-benches.  Prints ``name,us_per_call,derived`` CSV
+and optionally machine-readable JSON.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--skip-lm] \
-      [--only SECTION]
+      [--only SECTION] [--json OUT.json]
 
 Sections: paper, rank_problem, merge, sparse, randomized, lm.
-``--only SECTION`` runs just that section (e.g. the CI smoke leg uses
-``--only randomized``).
+``--only SECTION`` runs just that section and ``--json OUT.json``
+additionally writes one record per row with the fields CI consumes:
+``section``, ``name``, ``shape`` ("MxN" parsed from the name, null when
+the row has no shape), ``us_per_call``, ``rel_err`` (the row's relative
+error / e_sigma when it reports one, else null) and the raw ``derived``
+string.  The CI smoke leg runs ``--only randomized --json out.json``.
 """
 from __future__ import annotations
 
+import json
+import re
 import sys
 
 SECTIONS = ("paper", "rank_problem", "merge", "sparse", "randomized", "lm")
+
+_SHAPE_RE = re.compile(r"(\d+)x(\d+)")
+_ERR_RE = re.compile(
+    r"(?:rel_err(?:_topk)?|e_sigma|e_vs_dense|max_err)=([0-9.eE+-]+)")
+
+
+def _record(section: str, name: str, us: float, derived: str) -> dict:
+    shape = _SHAPE_RE.search(name)
+    err = _ERR_RE.search(derived)
+    return {
+        "section": section,
+        "name": name,
+        "shape": shape.group(0) if shape else None,
+        "us_per_call": us,
+        "rel_err": float(err.group(1)) if err else None,
+        "derived": derived,
+    }
 
 
 def _run_paper(rows, full: bool) -> None:
@@ -92,16 +116,31 @@ def main() -> None:
         if only not in SECTIONS:
             raise SystemExit(
                 f"--only {only!r}: unknown section; want one of {SECTIONS}")
+    json_path = None
+    if "--json" in argv:
+        idx = argv.index("--json") + 1
+        if idx >= len(argv):
+            raise SystemExit("--json needs an output path")
+        json_path = argv[idx]
 
     sections = [only] if only else [
         s for s in SECTIONS if not (s == "lm" and skip_lm)]
-    rows = []
+    records = []
     for section in sections:
+        rows = []
         _RUNNERS[section](rows, full)
+        records.extend(_record(section, name, us, derived)
+                       for name, us, derived in rows)
 
     print("\nname,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    for r in records:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"\nwrote {len(records)} records to {json_path}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Distributed SVD at "pod scale": hierarchical two-level merge + elastic
-failure recovery demo, on forced host devices.
+"""Distributed SVD at "pod scale" through the unified front door:
+hierarchical two-level merge + elastic failure recovery demo, on forced
+host devices.
 
     PYTHONPATH=src python examples/distributed_svd.py
 """
@@ -8,10 +9,9 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.core import sparse
-from repro.core.distributed import distributed_ranky_svd
+from repro.core.api import SolveConfig, svd
 from repro.ft.elastic import build_mesh, plan_mesh
 
 
@@ -19,33 +19,39 @@ def main():
     m, n = 64, 32_768
     coo = sparse.ensure_full_row_rank(
         sparse.random_bipartite(m, n, 2e-3, seed=1))
-    a = sparse.pad_to_block_multiple(coo.todense(), 16)
-    s_true = np.linalg.svd(a, compute_uv=False)[:m]
+    s_true = np.linalg.svd(coo.todense(), compute_uv=False)[:m]
 
-    # Two-level merge: 4 "pods" x 4 workers.  method="none" so the result
-    # is directly comparable to numpy on the same matrix (the repair
-    # methods perturb the input — benchmarks/paper_tables.py evaluates
-    # them against the repaired truth, per the paper's protocol).
+    # Two-level merge: 4 "pods" x 4 workers — SolveConfig(two_level=True)
+    # merges within the fast inner axis first, then across pods.
+    # method="none" so the result is directly comparable to numpy on the
+    # same matrix (the repair methods perturb the input —
+    # benchmarks/paper_tables.py evaluates them against the repaired
+    # truth, per the paper's protocol).  local_mode="svd" needs the
+    # dense path, so the adapter densifies the COO input itself.
     mesh = jax.make_mesh((4, 4), ("pod", "model"))
-    _, s = distributed_ranky_svd(
-        jnp.asarray(a), mesh, block_axes=("pod", "model"),
-        method="none", merge_mode="proxy", local_mode="svd",
-        hierarchical=True)
-    print(f"hierarchical 4x4: e_sigma={np.abs(np.asarray(s) - s_true).sum():.3e}")
+    res = svd(coo, SolveConfig(backend="shard_map", method="none",
+                               merge_mode="proxy", local_mode="svd",
+                               two_level=True),
+              mesh=mesh, block_axes=("pod", "model"))
+    print(f"hierarchical 4x4: "
+          f"e_sigma={np.abs(np.asarray(res.s) - s_true).sum():.3e} "
+          f"[{res.diagnostics.wall_time_s:.2f}s, "
+          f"peak~{res.plan.estimated_peak_bytes:,}B]")
 
     # Simulate losing a pod: re-plan the mesh with 12 surviving devices.
     survivors = jax.devices()[:12]
-    plan = plan_mesh(len(survivors), model_parallel=4,
-                     multi_pod_threshold=10**9)
-    new_mesh = build_mesh(plan, survivors)
-    print(f"after failure: plan={plan.shape} {plan.axis_names} "
-          f"(dropped {plan.dropped_devices})")
-    a12 = sparse.pad_to_block_multiple(coo.todense(), plan.shape[-1])
-    _, s2 = distributed_ranky_svd(
-        jnp.asarray(a12), new_mesh, block_axes=(plan.axis_names[-1],),
-        method="none", merge_mode="gram")
-    print(f"recovered on {plan.num_devices} devices: "
-          f"e_sigma={np.abs(np.asarray(s2) - s_true).sum():.3e}")
+    mplan = plan_mesh(len(survivors), model_parallel=4,
+                      multi_pod_threshold=10**9)
+    new_mesh = build_mesh(mplan, survivors)
+    print(f"after failure: plan={mplan.shape} {mplan.axis_names} "
+          f"(dropped {mplan.dropped_devices})")
+    # The adapter re-blocks (and re-pads) the same COO input for the
+    # surviving block axis — no manual pad_to_block_multiple.
+    res2 = svd(coo, SolveConfig(backend="shard_map", method="none",
+                                merge_mode="gram"),
+               mesh=new_mesh, block_axes=(mplan.axis_names[-1],))
+    print(f"recovered on {mplan.num_devices} devices: "
+          f"e_sigma={np.abs(np.asarray(res2.s) - s_true).sum():.3e}")
 
 
 if __name__ == "__main__":

@@ -1,21 +1,24 @@
-"""Quickstart: distributed SVD of a large sparse matrix with Ranky.
+"""Quickstart: distributed SVD of a large sparse matrix through the one
+front door, ``repro.core.api.svd``.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a paper-style sparse bipartite matrix, repairs block ranks with
-NeighborRandomChecker, computes the SVD with the one-level distributed
-algorithm (all CPU devices on this host act as the workers), and checks
-the result against numpy.
+Builds a paper-style sparse bipartite matrix and solves it with a single
+call: ``svd(a, SolveConfig(...)) -> SVDResult``.  The input can be a
+dense array, a host COO matrix, or a device BlockEll container — one
+adapter normalizes them — and ``backend="auto"`` lets the planner pick
+the strategy (exact gram, randomized sketch, hierarchical, shard_map)
+from memory estimates.  The result carries the explainable plan and
+solve diagnostics.
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.core import sparse
-from repro.core.distributed import distributed_ranky_svd
+from repro.core.api import SolveConfig, svd
 
 
 def main():
@@ -23,45 +26,50 @@ def main():
     m, n, density = 128, 65_536, 1e-3
     coo = sparse.ensure_full_row_rank(
         sparse.random_bipartite(m, n, density, seed=0))
-    a = sparse.pad_to_block_multiple(coo.todense(), 8)
-    print(f"matrix {a.shape}, nnz={coo.nnz} (density {coo.density():.1e})")
+    print(f"matrix {coo.shape}, nnz={coo.nnz} (density {coo.density():.1e})")
+    s_true = np.linalg.svd(coo.todense(), compute_uv=False)[:m]
 
+    # One call.  COO input runs the sparse-native BlockEll path (the
+    # matrix is never densified); method="none" skips repair so the
+    # result is directly comparable to numpy on the same matrix.
+    res = svd(coo, SolveConfig(method="none", num_blocks=8))
+    print("--- plan ---")
+    print(res.plan.explain())
+    print(f"e_sigma (auto plan)       = "
+          f"{np.abs(np.asarray(res.s) - s_true).sum():.3e} "
+          f"[{res.diagnostics.wall_time_s:.2f}s]")
+
+    # Explicit shard_map backend: one column block per device, plus the
+    # right vectors (V rows come back in original column order).
     mesh = jax.make_mesh((jax.device_count(),), ("blocks",))
-    print(f"mesh: {jax.device_count()} devices, one column block each")
+    res2 = svd(coo, SolveConfig(backend="shard_map", method="none",
+                                merge_mode="gram", want_right=True),
+               mesh=mesh)
+    print(f"e_sigma (shard_map, gram) = "
+          f"{np.abs(np.asarray(res2.s) - s_true).sum():.3e}")
+    recon_s = np.linalg.svd(
+        np.asarray(res2.u) * np.asarray(res2.s) @ np.asarray(res2.v).T,
+        compute_uv=False)
+    print(f"U S V^T self-consistency  = "
+          f"{np.abs(recon_s[:m] - np.asarray(res2.s)).sum():.3e}")
 
-    # Exactness of the distributed pipeline (no repair, so the result is
-    # directly comparable to numpy on the same matrix):
-    s_true = np.linalg.svd(a, compute_uv=False)[:m]
-    u, s = distributed_ranky_svd(
-        jnp.asarray(a), mesh, block_axes=("blocks",),
-        method="none", local_mode="svd", merge_mode="proxy")
-    print(f"e_sigma (paper-faithful proxy merge) = "
-          f"{np.abs(np.asarray(s) - s_true).sum():.3e}")
-    ug, sg, v = distributed_ranky_svd(
-        jnp.asarray(a), mesh, block_axes=("blocks",),
-        method="none", merge_mode="gram", want_right=True)
-    print(f"e_sigma (beyond-paper gram merge)    = "
-          f"{np.abs(np.asarray(sg) - s_true).sum():.3e}")
-    recon_s = np.linalg.svd(np.asarray(ug) * np.asarray(sg) @ np.asarray(v).T,
-                            compute_uv=False)
-    print(f"U S V^T factorization self-consistency: "
-          f"{np.abs(recon_s[:m] - np.asarray(sg)).sum():.3e}")
+    # The Ranky rank repair (the paper's contribution): the diagnostics
+    # carry the lonely/repaired row counts from the repair side-band.
+    res3 = svd(coo, SolveConfig(method="neighbor_random", num_blocks=8))
+    d3 = res3.diagnostics
+    print(f"lonely rows per block: {d3.lonely_rows_per_block}")
+    print(f"repaired rows: {d3.repaired_rows} of {d3.lonely_rows} lonely "
+          f"(rank problem fixed)")
 
-    # The Ranky rank repair (the paper's contribution): lonely rows per
-    # block before/after NeighborRandomChecker.  (Repair perturbs the
-    # matrix, so accuracy vs the REPAIRED truth is what the paper
-    # evaluates — see benchmarks/paper_tables.py.)
-    from repro.core import ranky
-    import jax as _jax
-    blocks = np.split(a, 8, axis=1)
-    lonely_before = sum(int(ranky.ref_lonely_rows(b).sum()) for b in blocks)
-    adj = ranky.row_adjacency(jnp.asarray(a))
-    fixed = [np.asarray(ranky.repair_block(
-        jnp.asarray(b), "neighbor_random", _jax.random.PRNGKey(i), adj))
-        for i, b in enumerate(blocks)]
-    lonely_after = sum(int(ranky.ref_lonely_rows(b).sum()) for b in fixed)
-    print(f"lonely rows: {lonely_before} -> {lonely_after} after "
-          f"NeighborRandomChecker (rank problem fixed)")
+    # Capacity planning without data: in the tall-row regime the exact
+    # gram stack stops fitting and the planner switches to the
+    # randomized sketch — plan() answers "what would svd() do for a
+    # matrix of this shape, and why" from an ASpec alone.
+    from repro.core.api import ASpec, plan
+    p = plan(ASpec(m=32_768, n=4096, nnz=100_000, num_blocks=8),
+             SolveConfig(method="random", rank=16))
+    print(f"planned strategy for a 32768-row matrix: {p.strategy}")
+    print("  " + p.reasons[-1])
 
 
 if __name__ == "__main__":

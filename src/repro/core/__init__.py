@@ -1,7 +1,23 @@
 """Ranky core: distributed SVD on large sparse matrices (the paper's
-contribution), in JAX."""
+contribution), in JAX.
+
+Public surface (``__all__``):
+
+* ``api`` — the one front door: ``api.svd(a, SolveConfig(...)) ->
+  SVDResult`` with an explainable plan (``api.plan``) and diagnostics.
+  ``SolveConfig`` / ``SVDResult`` / ``Plan`` / ``ASpec`` / ``plan`` /
+  ``default_key`` are re-exported here for convenience.
+* ``ranky_svd`` / ``hierarchical_ranky_svd`` / ``distributed_ranky_svd``
+  — the legacy drivers, now thin shims over the same engines.
+* ``sparse`` / ``randomized`` / ``spectral`` / ``planner`` — submodules.
+* ``svd`` — NOTE: this name is the *local SVD primitives submodule*
+  (``repro.core.svd``), kept for backward compatibility; the unified
+  solver function lives at ``repro.core.api.svd``.
+* The Ranky checker primitives (``lonely_rows``, ``repair_block``, ...).
+"""
 from repro.core.ranky import (  # noqa: F401
     METHODS,
+    default_key,
     lonely_rows,
     random_checker,
     neighbor_checker,
@@ -14,5 +30,29 @@ from repro.core.ranky import (  # noqa: F401
     sparse_lonely_rows,
     split_and_repair,
 )
+from repro.core.hierarchy import hierarchical_ranky_svd  # noqa: F401
 from repro.core.distributed import distributed_ranky_svd  # noqa: F401
-from repro.core import sparse, spectral, svd  # noqa: F401
+from repro.core import planner, randomized, sparse, spectral, svd  # noqa: F401
+from repro.core import api  # noqa: F401  (imports ranky/planner; keep last)
+from repro.core.api import (  # noqa: F401
+    SolveConfig,
+    SVDResult,
+    Diagnostics,
+    plan,
+)
+from repro.core.planner import ASpec, Plan, PlanError  # noqa: F401
+
+__all__ = [
+    # the unified front door
+    "api", "SolveConfig", "SVDResult", "Diagnostics", "plan",
+    "ASpec", "Plan", "PlanError", "planner", "default_key",
+    # legacy drivers (deprecation shims over the same engines)
+    "ranky_svd", "hierarchical_ranky_svd", "distributed_ranky_svd",
+    # submodules
+    "sparse", "randomized", "spectral", "svd",
+    # checker primitives
+    "METHODS", "lonely_rows", "random_checker", "neighbor_checker",
+    "neighbor_random_checker", "repair_block", "repair_block_sparse",
+    "row_adjacency", "row_adjacency_sparse", "sparse_lonely_rows",
+    "split_and_repair",
+]

@@ -1,0 +1,536 @@
+"""One front door for the Ranky distributed SVD: ``svd(a, config)``.
+
+After PRs 1–2 the repo exposed the paper's one capability — recover
+(U, S[, V]) of a large sparse matrix — through three drivers with
+diverging keyword surfaces.  This module unifies them:
+
+* :class:`SolveConfig` — a frozen dataclass holding EVERY knob, with all
+  cross-field validation in ``__post_init__`` (invalid configs cannot be
+  constructed; every error names the offending fields).
+* :func:`svd` — normalizes any input representation (dense ndarray,
+  ``sparse.COOMatrix``, ``sparse.BlockEll``) through one
+  :func:`as_block_input` adapter, asks the planner
+  (``core/planner.py``) for an explainable :class:`~repro.core.planner.Plan`,
+  dispatches to the single / hierarchical / shard_map engine, and wraps
+  the result in :class:`SVDResult` with the plan and diagnostics
+  (lonely/repaired row counts, estimated peak bytes, wall time).
+* :func:`plan` — the planner alone: what WOULD ``svd`` do for a matrix
+  of this shape, and why.
+
+The legacy entry points (``ranky.ranky_svd``,
+``hierarchy.hierarchical_ranky_svd``, ``distributed.distributed_ranky_svd``)
+are thin deprecation shims: each builds a SolveConfig (getting the
+centralized validation for free) and calls the same engine ``svd``
+dispatches to, so ``svd(a, config)`` reproduces every legacy call
+bit-identically.
+
+Determinism: ``key=None`` everywhere resolves to the ONE documented
+default key ``ranky.default_key()`` (= ``jax.random.PRNGKey(0)``), so
+repeated solves of the same input are reproducible across all drivers.
+
+Usage::
+
+    from repro.core.api import svd, SolveConfig
+
+    res = svd(coo, SolveConfig(method="neighbor_random", rank=16))
+    res.u, res.s, res.v      # factors (v None unless want_right=True)
+    print(res.plan.explain())            # why this strategy
+    res.diagnostics.repaired_rows        # Ranky side-band counts
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import planner, ranky, sparse
+from repro.core.planner import ASpec, Plan, PlanError  # noqa: F401  (re-export)
+from repro.core.ranky import default_key  # noqa: F401  (re-export)
+
+BACKENDS = ("single", "hierarchical", "shard_map", "auto")
+LOCAL_MODES = ("gram", "svd")
+MERGE_MODES = ("proxy", "gram")
+
+# Above this M the repaired-row diagnostic for method="neighbor" is
+# skipped (it needs the O(M^2) row adjacency); the count is exact and
+# O(M) for the other methods at any scale.
+_REPAIR_DIAG_MAX_M = 4096
+
+MatrixInput = Union[np.ndarray, jnp.ndarray, "sparse.COOMatrix",
+                    "sparse.BlockEll"]
+
+
+def _bad(field_a: str, val_a, field_b: str, val_b, why: str) -> ValueError:
+    return ValueError(
+        f"invalid SolveConfig: {field_a}={val_a!r} with {field_b}={val_b!r} "
+        f"— {why}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveConfig:
+    """Every knob of the unified solver, validated on construction.
+
+    Fields (all optional; the defaults give the fast beyond-paper exact
+    path with NeighborRandomChecker repair and an auto-planned backend):
+
+    * ``method`` — rank-repair checker, one of ``ranky.METHODS``.
+    * ``backend`` — ``"single"`` (one-level, one host),
+      ``"hierarchical"`` (host-orchestrated tree merge),
+      ``"shard_map"`` (one column block per mesh device) or ``"auto"``
+      (the planner decides; see ``core/planner.py`` for the rules).
+    * ``local_mode`` — per-block factorization for the proxy merge:
+      ``"gram"`` (TPU-native gram+eigh) or ``"svd"`` (paper dgesvd
+      analogue; dense input only).
+    * ``merge_mode`` — ``"gram"`` (beyond-paper psum/sum of grams) or
+      ``"proxy"`` (paper-faithful proxy-panel SVD).  The hierarchical
+      backend merges panels by construction and ignores this.
+    * ``rank`` / ``oversample`` / ``power_iters`` — ``rank=k`` requests
+      a truncated top-k solve; on the single/shard_map backends that is
+      the randomized (k+p)-row sketch (``core/randomized.py``), on the
+      hierarchical backend the truncated tree merge.
+    * ``num_blocks`` — column-block count D; ``None`` derives it from
+      the input (BlockEll carries its D), the mesh, or the planner
+      default.
+    * ``fanout`` — tree-merge group size (hierarchical backend).
+    * ``sketch`` — hierarchical backend only: randomized truncated leaf
+      panels instead of exact gram+eigh leaves.
+    * ``want_right`` — also recover right vectors V (all backends).
+    * ``use_kernel`` — route grams/sketches through the Pallas kernels.
+    * ``undetermined_tail`` — emulate the paper's rank problem (single
+      backend, proxy merge, exact only).
+    * ``two_level`` — shard_map backend: two-level (intra/inter pod)
+      proxy merge over two mesh block axes.
+    * ``memory_budget_bytes`` — planner budget (default 4 GiB).
+    * ``key`` — PRNG key; ``None`` means ``default_key()``.
+    """
+
+    method: str = "neighbor_random"
+    backend: str = "auto"
+    local_mode: str = "gram"
+    merge_mode: str = "gram"
+    rank: Optional[int] = None
+    oversample: int = 8
+    power_iters: int = 2
+    num_blocks: Optional[int] = None
+    fanout: int = 4
+    sketch: bool = False
+    want_right: bool = False
+    use_kernel: bool = False
+    undetermined_tail: bool = False
+    two_level: bool = False
+    memory_budget_bytes: Optional[int] = None
+    key: Optional[jax.Array] = None
+
+    def __post_init__(self):
+        # --- single-field domains -----------------------------------
+        if self.method not in ranky.METHODS:
+            raise ValueError(f"invalid SolveConfig: method={self.method!r} "
+                             f"must be one of {ranky.METHODS}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"invalid SolveConfig: backend={self.backend!r} "
+                             f"must be one of {BACKENDS}")
+        if self.local_mode not in LOCAL_MODES:
+            raise ValueError(
+                f"invalid SolveConfig: local_mode={self.local_mode!r} "
+                f"must be one of {LOCAL_MODES}")
+        if self.merge_mode not in MERGE_MODES:
+            raise ValueError(
+                f"invalid SolveConfig: merge_mode={self.merge_mode!r} "
+                f"must be one of {MERGE_MODES}")
+        if self.rank is not None and self.rank < 1:
+            raise ValueError(f"invalid SolveConfig: rank={self.rank} "
+                             f"must be >= 1 (or None for the exact solve)")
+        if self.oversample < 0:
+            raise ValueError(f"invalid SolveConfig: oversample="
+                             f"{self.oversample} must be >= 0")
+        if self.power_iters < 0:
+            raise ValueError(f"invalid SolveConfig: power_iters="
+                             f"{self.power_iters} must be >= 0")
+        if self.num_blocks is not None and self.num_blocks < 1:
+            raise ValueError(f"invalid SolveConfig: num_blocks="
+                             f"{self.num_blocks} must be >= 1")
+        if self.fanout < 2:
+            raise ValueError(f"invalid SolveConfig: fanout={self.fanout} "
+                             f"must be >= 2")
+        if (self.memory_budget_bytes is not None
+                and self.memory_budget_bytes < 1):
+            raise ValueError(
+                f"invalid SolveConfig: memory_budget_bytes="
+                f"{self.memory_budget_bytes} must be >= 1")
+
+        # --- cross-field constraints (each names both fields) -------
+        if self.undetermined_tail and self.merge_mode == "gram":
+            raise _bad("undetermined_tail", True, "merge_mode", "gram",
+                       "the emulation fills dead proxy PANEL columns with "
+                       "noise and the gram merge never builds panels; use "
+                       "merge_mode='proxy'")
+        if self.undetermined_tail and self.rank is not None:
+            raise _bad("undetermined_tail", True, "rank", self.rank,
+                       "the randomized rank-k path never builds proxy "
+                       "panels; drop rank= to use the proxy merge")
+        if self.undetermined_tail and self.backend in ("hierarchical",
+                                                       "shard_map"):
+            raise _bad("undetermined_tail", True, "backend", self.backend,
+                       "the rank-problem emulation only exists in the "
+                       "single-host proxy merge; use backend='single' or "
+                       "'auto'")
+        if self.sketch and self.backend in ("single", "shard_map"):
+            raise _bad("sketch", True, "backend", self.backend,
+                       "sketch leaves belong to the hierarchical tree "
+                       "merge; for the single/shard_map randomized path "
+                       "set rank=k instead")
+        if self.two_level and self.backend != "shard_map":
+            raise _bad("two_level", True, "backend", self.backend,
+                       "the two-level merge schedules shard_map "
+                       "collectives over two mesh axes; use "
+                       "backend='shard_map' with a two-axis mesh")
+        if self.local_mode == "svd" and self.backend == "hierarchical":
+            raise _bad("local_mode", "svd", "backend", "hierarchical",
+                       "the tree merge computes gram+eigh leaves; "
+                       "local_mode only applies to the single/shard_map "
+                       "proxy merge")
+        if self.local_mode == "svd" and self.rank is not None:
+            raise _bad("local_mode", "svd", "rank", self.rank,
+                       "the randomized rank-k sketch replaces the local "
+                       "factorization entirely; drop rank= or use "
+                       "local_mode='gram'")
+        if self.local_mode == "svd" and self.use_kernel:
+            raise _bad("local_mode", "svd", "use_kernel", True,
+                       "the Pallas kernels accelerate the gram path; "
+                       "local_mode='svd' never forms a gram")
+
+    def resolved_key(self) -> jax.Array:
+        """The PRNG key this solve runs with (``default_key()`` if
+        unset) — the one documented ``key=None`` behaviour shared by
+        every driver."""
+        return default_key() if self.key is None else self.key
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostics:
+    """Side-band observations of one solve.
+
+    ``repaired_rows`` is exact for methods none/random/neighbor_random
+    at any scale (those repair precisely the lonely rows); for
+    ``neighbor`` it is derived from one host-side repair pass and is
+    ``None`` when M > 4096 (the pass needs the O(M^2) adjacency).
+    """
+
+    lonely_rows_per_block: Tuple[int, ...]
+    lonely_rows: int
+    repaired_rows: Optional[int]
+    strategy: str
+    estimated_peak_bytes: int
+    wall_time_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SVDResult:
+    """Factors + the plan that produced them + diagnostics.
+
+    Unpacks like the legacy drivers' tuples: ``u, s = result`` (or
+    ``u, s, v = result`` when ``want_right=True``).  ``v`` rows are in
+    ORIGINAL column order (the adapter's zero-column padding is trimmed
+    back off).
+    """
+
+    u: jnp.ndarray
+    s: jnp.ndarray
+    v: Optional[jnp.ndarray]
+    plan: Plan
+    diagnostics: Diagnostics
+
+    def __iter__(self):
+        yield self.u
+        yield self.s
+        if self.v is not None:
+            yield self.v
+
+
+# ---------------------------------------------------------------------------
+# Input normalization: one adapter for every representation
+# ---------------------------------------------------------------------------
+
+def describe(a: MatrixInput, num_blocks: int) -> ASpec:
+    """Shape summary (M, N, nnz, D, kind) of any accepted input."""
+    if isinstance(a, sparse.BlockEll):
+        nnz = int(np.count_nonzero(np.asarray(a.col_vals)))
+        return ASpec(m=a.m, n=a.n, nnz=nnz, num_blocks=num_blocks,
+                     kind="ell")
+    if isinstance(a, sparse.COOMatrix):
+        return ASpec(m=a.shape[0], n=a.shape[1], nnz=a.nnz,
+                     num_blocks=num_blocks, kind="coo")
+    arr = np.asarray(a)
+    if arr.ndim != 2:
+        raise ValueError(f"dense input must be 2-D, got shape {arr.shape}")
+    return ASpec(m=arr.shape[0], n=arr.shape[1],
+                 nnz=int(np.count_nonzero(arr)), num_blocks=num_blocks,
+                 kind="dense")
+
+
+def as_block_input(a: MatrixInput, num_blocks: int, *,
+                   needs_dense: bool = False):
+    """Normalize any accepted representation for the engines.
+
+    * dense ndarray — zero-pad columns to the block multiple (lossless
+      for U and S) and hand back a jnp array;
+    * ``COOMatrix`` — build the device-side ``BlockEll`` container
+      (sparse-native), or densify+pad when the config needs the dense
+      path (``needs_dense``, e.g. ``local_mode='svd'``);
+    * ``BlockEll`` — passed through (its block count must match).
+    """
+    if isinstance(a, sparse.BlockEll):
+        if a.num_blocks != num_blocks:
+            raise ValueError(
+                f"BlockEll has {a.num_blocks} blocks, but the resolved "
+                f"num_blocks is {num_blocks}")
+        if needs_dense:
+            raise ValueError(
+                "the sparse BlockEll path is gram-native; this config "
+                "needs the dense path (local_mode='svd') — pass a dense "
+                "array or a COOMatrix instead")
+        return a
+    if isinstance(a, sparse.COOMatrix):
+        if needs_dense:
+            return jnp.asarray(
+                sparse.pad_to_block_multiple(a.todense(), num_blocks))
+        return sparse.block_ell_from_coo(a, num_blocks)
+    arr = np.asarray(a)
+    return jnp.asarray(sparse.pad_to_block_multiple(arr, num_blocks))
+
+
+def _resolve_num_blocks(a: MatrixInput, config: SolveConfig,
+                        mesh, block_axes) -> Tuple[int, Optional[str]]:
+    """Resolution order: explicit config > BlockEll's D > mesh block
+    axes > device count (>1) > DEFAULT_NUM_BLOCKS.  Returns (D, note)."""
+    if config.num_blocks is not None:
+        return config.num_blocks, None
+    if isinstance(a, sparse.BlockEll):
+        return a.num_blocks, None
+    if mesh is not None:
+        d = 1
+        for ax in (block_axes or mesh.axis_names):
+            d *= mesh.shape[ax]
+        return d, f"num_blocks={d} derived from the mesh block axes"
+    dev = jax.device_count()
+    if dev > 1:
+        return dev, f"num_blocks={dev} defaulted to the device count"
+    return planner.DEFAULT_NUM_BLOCKS, (
+        f"num_blocks defaulted to {planner.DEFAULT_NUM_BLOCKS}")
+
+
+# ---------------------------------------------------------------------------
+# Engine runners (shared by svd() and the legacy shims — one code path,
+# so the parity is bit-identical by construction)
+# ---------------------------------------------------------------------------
+
+def _run_single(a, config: SolveConfig):
+    return ranky.solve_single(
+        a, num_blocks=config.num_blocks, method=config.method,
+        local_mode=config.local_mode, merge_mode=config.merge_mode,
+        undetermined_tail=config.undetermined_tail, rank=config.rank,
+        oversample=config.oversample, power_iters=config.power_iters,
+        want_right=config.want_right, use_kernel=config.use_kernel,
+        key=config.resolved_key())
+
+
+def _run_hierarchical(a, config: SolveConfig, *, sketch_override=...):
+    from repro.core import hierarchy
+
+    sketch = config.sketch if sketch_override is ... else sketch_override
+    return hierarchy.solve_hierarchical(
+        a, num_blocks=config.num_blocks, fanout=config.fanout,
+        rank=config.rank, method=config.method, sketch=sketch,
+        oversample=config.oversample, power_iters=config.power_iters,
+        want_right=config.want_right, use_kernel=config.use_kernel,
+        key=config.resolved_key())
+
+
+def _run_shard_map(a, mesh, config: SolveConfig, *, block_axes=None):
+    from repro.core import distributed
+
+    if block_axes is None:
+        block_axes = mesh.axis_names
+    return distributed.solve_shard_map(a, mesh, block_axes=tuple(block_axes),
+                                       config=config)
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+def _lonely_per_block(a_norm, num_blocks: int) -> Tuple[int, ...]:
+    if isinstance(a_norm, sparse.BlockEll):
+        lonely = jax.vmap(
+            lambda rows, vals: ranky.sparse_lonely_rows(rows, vals, a_norm.m)
+        )(a_norm.col_rows, a_norm.col_vals)
+        return tuple(int(x) for x in np.asarray(lonely.sum(axis=1)))
+    m, n = a_norm.shape
+    blocks = np.asarray(a_norm).reshape(m, num_blocks, n // num_blocks)
+    return tuple(int(x) for x in (~(blocks != 0).any(axis=2)).sum(axis=0))
+
+
+def _repaired_rows(a_norm, num_blocks: int, method: str, key: jax.Array,
+                   lonely_total: int, m: int) -> Optional[int]:
+    if method == "none":
+        return 0
+    if method in ("random", "neighbor_random"):
+        # These repair EVERY lonely row (random fallback), exactly once.
+        return lonely_total
+    if m > _REPAIR_DIAG_MAX_M:
+        return None  # neighbor count needs the O(M^2) adjacency
+    repaired = ranky.split_and_repair(a_norm, num_blocks, method, key)
+    if isinstance(repaired, sparse.RepairedSparseBlocks):
+        return int(np.asarray(repaired.repair_mask).sum())
+    after = sum(_lonely_per_block(
+        jnp.transpose(repaired, (1, 0, 2)).reshape(m, -1), num_blocks))
+    return lonely_total - after
+
+
+# ---------------------------------------------------------------------------
+# The front door
+# ---------------------------------------------------------------------------
+
+def plan(a: Union[MatrixInput, ASpec], config: Optional[SolveConfig] = None,
+         *, mesh=None, block_axes=None, **overrides) -> Plan:
+    """What would :func:`svd` do for this input, and why.
+
+    ``a`` may be an actual matrix (any accepted representation) or an
+    :class:`~repro.core.planner.ASpec` — so capacity planning needs no
+    data, only shapes.
+    """
+    config = _coerce_config(config, overrides)
+    if isinstance(a, ASpec):
+        spec = (a if config.num_blocks in (None, a.num_blocks)
+                else dataclasses.replace(a, num_blocks=config.num_blocks))
+        note = None
+    else:
+        d, note = _resolve_num_blocks(a, config, mesh, block_axes)
+        spec = describe(a, d)
+    device_count, mesh_provided = _device_env(mesh, block_axes)
+    p = planner.make_plan(spec, config, device_count=device_count,
+                          mesh_provided=mesh_provided)
+    if note:
+        p = dataclasses.replace(p, reasons=p.reasons + (note,))
+    return p
+
+
+def _device_env(mesh, block_axes) -> Tuple[int, bool]:
+    if mesh is None:
+        return jax.device_count(), False
+    d = 1
+    for ax in (block_axes or mesh.axis_names):
+        d *= mesh.shape[ax]
+    return d, True
+
+
+def _coerce_config(config: Optional[SolveConfig],
+                   overrides: Dict[str, Any]) -> SolveConfig:
+    if config is None:
+        return SolveConfig(**overrides)
+    if not isinstance(config, SolveConfig):
+        raise TypeError(f"config must be a SolveConfig, got {type(config)}")
+    return dataclasses.replace(config, **overrides) if overrides else config
+
+
+def svd(a: MatrixInput, config: Optional[SolveConfig] = None, *,
+        mesh=None, block_axes=None, **overrides) -> SVDResult:
+    """Distributed Ranky SVD of ``a`` — the one public entry point.
+
+    Args:
+      a: dense (M, N) ndarray, ``sparse.COOMatrix`` or
+        ``sparse.BlockEll``.  Dense/COO inputs are normalized (padded /
+        converted) by :func:`as_block_input`; BlockEll is consumed
+        sparse-natively.
+      config: a :class:`SolveConfig`; keyword ``overrides`` are applied
+        on top (``svd(a, rank=16)`` works without building one).
+      mesh / block_axes: only for the shard_map backend — the device
+        mesh and which of its axes the column blocks shard over
+        (default: all axes).  Passing a mesh makes ``backend="auto"``
+        prefer shard_map.
+
+    Returns an :class:`SVDResult`: U (M, r), S (r,), V (N, r) when
+    ``want_right`` (rows in original column order), the explainable
+    :class:`~repro.core.planner.Plan`, and :class:`Diagnostics`.
+    """
+    config = _coerce_config(config, overrides)
+    if mesh is not None and config.backend not in ("shard_map", "auto"):
+        raise ValueError(
+            f"mesh= was provided but config.backend={config.backend!r}; a "
+            f"mesh only applies to backend='shard_map' (or 'auto')")
+
+    t0 = time.perf_counter()
+    d, note = _resolve_num_blocks(a, config, mesh, block_axes)
+    spec = describe(a, d)
+    if config.rank is not None and config.rank > spec.m:
+        raise ValueError(f"rank={config.rank} must be in [1, M={spec.m}]")
+    device_count, mesh_provided = _device_env(mesh, block_axes)
+    p = planner.make_plan(spec, config, device_count=device_count,
+                          mesh_provided=mesh_provided)
+    if note:
+        p = dataclasses.replace(p, reasons=p.reasons + (note,))
+
+    # local_mode is only consumed by the exact proxy merge; under the
+    # gram merge (or the randomized path) a local_mode='svd' config
+    # still runs sparse-natively — same behaviour as the legacy shims.
+    needs_dense = (config.local_mode == "svd"
+                   and p.strategy == "exact_proxy")
+    if isinstance(a, sparse.BlockEll) and needs_dense:
+        raise ValueError(
+            "local_mode='svd' with the proxy merge needs the dense path "
+            "but the input is a sparse.BlockEll (the sparse path is "
+            "gram-native); pass a dense array or COOMatrix, or use "
+            "local_mode='gram'")
+    a_norm = as_block_input(a, d, needs_dense=needs_dense)
+    # Materialize the plan's decisions into the config the engine runs
+    # with: p.rank is None when the plan is "solve exactly, truncate
+    # after" (truncate_to), so every backend sees the same decision.
+    run_cfg = dataclasses.replace(config, num_blocks=d, backend=p.backend,
+                                  rank=p.rank)
+
+    if p.backend == "single":
+        out = _run_single(a_norm, run_cfg)
+    elif p.backend == "hierarchical":
+        out = _run_hierarchical(a_norm, run_cfg,
+                                sketch_override=p.sketch_leaves)
+    elif p.backend == "shard_map":
+        if mesh is None:
+            if jax.device_count() != d:
+                raise ValueError(
+                    f"backend='shard_map' with no mesh= needs one device "
+                    f"per block: num_blocks={d} but device_count="
+                    f"{jax.device_count()}")
+            mesh = jax.make_mesh((d,), ("blocks",))
+            block_axes = ("blocks",)
+        out = _run_shard_map(a_norm, mesh, run_cfg, block_axes=block_axes)
+    else:  # pragma: no cover - planner only emits the three above
+        raise AssertionError(f"planner produced unknown backend {p.backend!r}")
+
+    u, s = out[0], out[1]
+    v = out[2] if config.want_right else None
+    if p.truncate_to is not None:
+        k = p.truncate_to
+        u, s = u[:, :k], s[:k]
+        v = v[:, :k] if v is not None else None
+    jax.block_until_ready((u, s) if v is None else (u, s, v))
+    if v is not None:
+        v = v[:spec.n]  # trim the adapter's zero-column padding back off
+    wall = time.perf_counter() - t0
+
+    lonely = _lonely_per_block(a_norm, d)
+    lonely_total = sum(lonely)
+    diag = Diagnostics(
+        lonely_rows_per_block=lonely,
+        lonely_rows=lonely_total,
+        repaired_rows=_repaired_rows(a_norm, d, config.method,
+                                     config.resolved_key(), lonely_total,
+                                     spec.m),
+        strategy=p.strategy,
+        estimated_peak_bytes=p.estimated_peak_bytes,
+        wall_time_s=wall,
+    )
+    return SVDResult(u=u, s=s, v=v, plan=p, diagnostics=diag)

@@ -214,7 +214,28 @@ def _sparse_svd_shard_fn(
     return u, s, v_blk
 
 
-def distributed_ranky_svd(
+def solve_shard_map(a: jax.Array, mesh: Mesh, *,
+                    block_axes: Sequence[str], config):
+    """The ``backend="shard_map"`` engine behind ``repro.core.api.svd``
+    (and the legacy ``distributed_ranky_svd`` shim): unpacks the
+    validated ``api.SolveConfig`` and runs the shard_map pipeline."""
+    return _solve_shard_map(
+        a, mesh,
+        block_axes=tuple(block_axes),
+        method=config.method,
+        local_mode=config.local_mode,
+        merge_mode=config.merge_mode,
+        hierarchical=config.two_level,
+        use_kernel=config.use_kernel,
+        want_right=config.want_right,
+        rank=config.rank,
+        oversample=config.oversample,
+        power_iters=config.power_iters,
+        key=config.resolved_key(),
+    )
+
+
+def _solve_shard_map(
     a: jax.Array,
     mesh: Mesh,
     *,
@@ -258,7 +279,7 @@ def distributed_ranky_svd(
     """
     axes = tuple(block_axes)
     if key is None:
-        key = jax.random.PRNGKey(0)
+        key = ranky.default_key()
     d_total = 1
     for ax in axes:
         d_total *= mesh.shape[ax]
@@ -322,3 +343,43 @@ def distributed_ranky_svd(
     sharded = shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec)
     a = jax.device_put(a, NamedSharding(mesh, P(None, axes)))
     return jax.jit(sharded)(a, key)
+
+
+def distributed_ranky_svd(
+    a: jax.Array,
+    mesh: Mesh,
+    *,
+    block_axes: Sequence[str] = ("model",),
+    method: str = "neighbor_random",
+    local_mode: str = "gram",
+    merge_mode: str = "gram",
+    hierarchical: bool = False,
+    use_kernel: bool = False,
+    want_right: bool = False,
+    rank: Optional[int] = None,
+    oversample: int = 8,
+    power_iters: int = 2,
+    key: Optional[jax.Array] = None,
+):
+    """DEPRECATED legacy entry point — use ``repro.core.api.svd`` with a
+    ``SolveConfig(backend="shard_map", ...)`` and ``mesh=``/
+    ``block_axes=``.
+
+    Thin shim: builds the SolveConfig (centralized validation) and runs
+    the same ``solve_shard_map`` engine ``api.svd`` dispatches to, so
+    the two surfaces are bit-identical.
+    """
+    import warnings
+
+    from repro.core import api
+
+    warnings.warn(
+        "distributed_ranky_svd is deprecated; use repro.core.api.svd "
+        "with SolveConfig(backend='shard_map', ...) and mesh=",
+        DeprecationWarning, stacklevel=2)
+    cfg = api.SolveConfig(
+        backend="shard_map", method=method, local_mode=local_mode,
+        merge_mode=merge_mode, two_level=hierarchical,
+        use_kernel=use_kernel, want_right=want_right, rank=rank,
+        oversample=oversample, power_iters=power_iters, key=key)
+    return solve_shard_map(a, mesh, block_axes=block_axes, config=cfg)

@@ -39,7 +39,7 @@ def _merge_group(panels: jnp.ndarray, rank: int) -> jnp.ndarray:
     return u[:, :rank] * s[None, :rank]
 
 
-def hierarchical_ranky_svd(
+def solve_hierarchical(
     a,
     *,
     num_blocks: int,
@@ -49,11 +49,17 @@ def hierarchical_ranky_svd(
     sketch: bool = False,
     oversample: int = 8,
     power_iters: int = 2,
+    want_right: bool = False,
+    use_kernel: bool = False,
     key: Optional[jax.Array] = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Tree-merged Ranky SVD.  Returns (U, S) with S of length ``rank``
-    (defaults to M — exact; r < M gives the truncated incremental
-    algorithm whose failure on rank-deficient blocks motivates Ranky).
+):
+    """Tree-merged Ranky SVD — the ``backend="hierarchical"`` engine
+    behind ``repro.core.api.svd`` (and the legacy
+    ``hierarchical_ranky_svd`` shim).  Returns (U, S) with S of length
+    ``rank`` (defaults to M — exact; r < M gives the truncated
+    incremental algorithm whose failure on rank-deficient blocks
+    motivates Ranky) — or (U, S, V) with ``want_right``, V (D*W, r) in
+    padded column order recovered per block as ``A_blk^T U diag(1/S)``.
 
     ``a`` is a dense (M, N) array (N must divide by num_blocks) or a
     sparse.BlockEll container (sparse-native leaves, no block ever
@@ -74,6 +80,8 @@ def hierarchical_ranky_svd(
 
     m = a.m if isinstance(a, sparse.BlockEll) else a.shape[0]
     r = m if rank is None else min(rank, m)
+    if key is None:
+        key = ranky.default_key()
 
     blocks = ranky.split_and_repair(a, num_blocks, method, key)
 
@@ -85,7 +93,7 @@ def hierarchical_ranky_svd(
             blocks, rank=r, oversample=oversample,
             power_iters=power_iters, key=key)
     else:
-        us, ss = lsvd.local_svd_gram_stack(blocks)
+        us, ss = lsvd.local_svd_gram_stack(blocks, use_kernel=use_kernel)
         panels = (us * ss[:, None, :])[:, :, :r]
 
     # Tree merge, groups of ``fanout`` per level.
@@ -101,4 +109,42 @@ def hierarchical_ranky_svd(
 
     panel = panels[0]  # (M, r) == U * S of A (up to unitary, exactly if r = rank(A))
     u, s, _ = jnp.linalg.svd(panel, full_matrices=False)
-    return u, s
+    if not want_right:
+        return u, s
+    return u, s, ranky.right_vectors_stack(blocks, u, s)
+
+
+def hierarchical_ranky_svd(
+    a,
+    *,
+    num_blocks: int,
+    fanout: int = 4,
+    rank: Optional[int] = None,
+    method: str = "neighbor_random",
+    sketch: bool = False,
+    oversample: int = 8,
+    power_iters: int = 2,
+    want_right: bool = False,
+    key: Optional[jax.Array] = None,
+):
+    """DEPRECATED legacy entry point — use ``repro.core.api.svd`` with a
+    ``SolveConfig(backend="hierarchical", ...)``.
+
+    Thin shim: builds the SolveConfig (centralized validation) and runs
+    the same ``solve_hierarchical`` engine ``api.svd`` dispatches to.
+    Returns the legacy (U, S) tuple — or (U, S, V) with
+    ``want_right=True`` (V in padded column order).
+    """
+    import warnings
+
+    from repro.core import api
+
+    warnings.warn(
+        "hierarchical_ranky_svd is deprecated; use repro.core.api.svd "
+        "with SolveConfig(backend='hierarchical', ...)",
+        DeprecationWarning, stacklevel=2)
+    cfg = api.SolveConfig(
+        backend="hierarchical", method=method, num_blocks=num_blocks,
+        fanout=fanout, rank=rank, sketch=sketch, oversample=oversample,
+        power_iters=power_iters, want_right=want_right, key=key)
+    return api._run_hierarchical(a, cfg)

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparse
+from repro.core.ranky import default_key
 
 # Key fold tag for the test matrix: shared by the single-host and
 # distributed drivers so both draw the identical Omega for a given key.
@@ -194,7 +195,7 @@ def randomized_svd_blocks(
     is the oracle twin).  V, when requested, is (D*W, k) in padded
     column order (zero-pad columns carry zero rows)."""
     if key is None:
-        key = jax.random.PRNGKey(0)
+        key = default_key()
 
     if isinstance(blocks, sparse.RepairedSparseBlocks):
         ell = blocks.ell
@@ -249,7 +250,7 @@ def block_truncated_panels(
     hierarchy.hierarchical_ranky_svd's tree merge in place of the
     O(M^3)-per-block gram+eigh leaves."""
     if key is None:
-        key = jax.random.PRNGKey(0)
+        key = default_key()
 
     def one_block(sketch1, pullback1, m):
         l = sketch_width(rank, oversample, m)

@@ -34,6 +34,17 @@ from repro.core import sparse
 
 METHODS = ("none", "random", "neighbor", "neighbor_random")
 
+# The ONE documented deterministic default: every driver (single-host,
+# hierarchical, shard_map, randomized) resolves key=None to this exact
+# key, so unkeyed solves are reproducible across drivers and sessions.
+DEFAULT_SEED = 0
+
+
+def default_key() -> jax.Array:
+    """``jax.random.PRNGKey(DEFAULT_SEED)`` — the shared ``key=None``
+    default of every Ranky driver (see repro.core.api)."""
+    return jax.random.PRNGKey(DEFAULT_SEED)
+
 
 # ---------------------------------------------------------------------------
 # Mask helpers
@@ -318,7 +329,7 @@ def split_and_repair(
       ELL plus the per-block repair side-band; nothing is densified)
     """
     if key is None:
-        key = jax.random.PRNGKey(0)
+        key = default_key()
     keys = jax.random.split(key, num_blocks)
     needs_adj = method in ("neighbor", "neighbor_random")
 
@@ -349,10 +360,31 @@ def split_and_repair(
     return jax.vmap(fix)(blocks, keys)
 
 
+def right_vectors_stack(blocks, u: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Right vectors of the REPAIRED matrix from a repaired block stack:
+    per block ``V_blk = A_blk^T U diag(1/S)``, stacked to (D*W, r) in
+    padded column order — the single-host twin of the per-device
+    ``want_right`` recovery in core/distributed.py."""
+    from repro.core import svd as lsvd
+
+    if isinstance(blocks, sparse.RepairedSparseBlocks):
+        ell = blocks.ell
+        v = jax.vmap(
+            lambda ids, rows, vals, rc, rm: lsvd.sparse_right_vectors(
+                ids, rows, vals, rc, rm, ell.width, u, s)
+        )(ell.col_ids, ell.col_rows, ell.col_vals,
+          blocks.repair_cols, blocks.repair_mask)     # (D, W, r)
+        return v.reshape(ell.num_blocks * ell.width, -1)
+    d, _, w = blocks.shape
+    v = jax.vmap(lambda blk: lsvd.right_vectors(blk, u, s))(blocks)
+    return v.reshape(d * w, -1)
+
+
 @partial(jax.jit, static_argnames=("num_blocks", "method", "local_mode",
                                    "merge_mode", "undetermined_tail",
-                                   "rank", "oversample", "power_iters"))
-def ranky_svd(
+                                   "rank", "oversample", "power_iters",
+                                   "want_right", "use_kernel"))
+def solve_single(
     a: BlockInput,
     *,
     num_blocks: int,
@@ -363,9 +395,14 @@ def ranky_svd(
     rank: Optional[int] = None,
     oversample: int = 8,
     power_iters: int = 2,
+    want_right: bool = False,
+    use_kernel: bool = False,
     key: Optional[jax.Array] = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """One-level Ranky distributed SVD, single host: returns (U, S) of A.
+):
+    """One-level Ranky distributed SVD, single host: the ``backend="single"``
+    engine behind ``repro.core.api.svd`` (and the legacy ``ranky_svd``
+    shim).  Returns (U, S) of A — or (U, S, V) with ``want_right``, V in
+    padded column order.
 
     ``a`` is either a dense (M, N) array — N must divide by num_blocks,
     pad with zero columns first (lossless for U and S; see
@@ -392,22 +429,14 @@ def ranky_svd(
     emulation lives in the proxy-panel merge: requesting it under
     ``merge_mode="gram"`` or ``rank=k`` (neither builds panels) is an
     error rather than a silent no-op.
+    Cross-field validation lives in ``api.SolveConfig`` (the shims build
+    one); this engine only keeps the input-dependent checks.
     """
     from repro.core import svd as lsvd
 
     is_sparse = isinstance(a, sparse.BlockEll)
-    if undetermined_tail and merge_mode == "gram":
-        raise ValueError(
-            "undetermined_tail emulates noise in proxy PANEL columns; the "
-            "gram merge never builds panels, so the flag would be silently "
-            "ignored — use merge_mode='proxy'")
-    if undetermined_tail and rank is not None:
-        raise ValueError(
-            "undetermined_tail emulates noise in proxy PANEL columns; the "
-            "randomized rank-k path never builds panels, so the flag would "
-            "be silently ignored — drop rank= to use the proxy merge")
     if key is None:
-        key = jax.random.PRNGKey(0)
+        key = default_key()
 
     blocks = split_and_repair(a, num_blocks, method, key)
 
@@ -416,30 +445,76 @@ def ranky_svd(
 
         return randomized.randomized_svd_blocks(
             blocks, rank=rank, oversample=oversample,
-            power_iters=power_iters, key=key)
+            power_iters=power_iters, key=key, want_right=want_right)
 
     if merge_mode == "gram":
-        return lsvd.merge_grams_eigh(lsvd.gram_stack(blocks))
-
-    if local_mode == "gram":
-        us = lsvd.local_svd_gram_stack(blocks)
-    elif local_mode == "svd":
-        if is_sparse:
-            raise ValueError(
-                "the sparse path is gram-native; use local_mode='gram'")
-        us = jax.vmap(lsvd.local_svd_exact)(blocks)
+        u, s = lsvd.merge_grams_eigh(
+            lsvd.gram_stack(blocks, use_kernel=use_kernel))
+    elif merge_mode == "proxy":
+        if local_mode == "gram":
+            us = lsvd.local_svd_gram_stack(blocks, use_kernel=use_kernel)
+        elif local_mode == "svd":
+            if is_sparse:
+                raise ValueError(
+                    "the sparse path is gram-native; use local_mode='gram'")
+            us = jax.vmap(lsvd.local_svd_exact)(blocks)
+        else:
+            raise ValueError(f"unknown local_mode {local_mode!r}")
+        panels = jax.vmap(lsvd.proxy_panel)(*us)  # (D, M, M)
+        if undetermined_tail:
+            u_all, s_all = us
+            smax = jnp.max(s_all, axis=1, keepdims=True)          # (D, 1)
+            dead = s_all <= 1e-9 * smax                           # (D, M)
+            nkeys = jax.random.split(jax.random.fold_in(key, 0xDEAD),
+                                     num_blocks)
+            noise = jax.vmap(
+                lambda k, p: jax.random.normal(k, p.shape, p.dtype))(
+                    nkeys, panels)
+            eps_scale = jnp.sqrt(jnp.finfo(panels.dtype).eps)
+            panels = jnp.where(dead[:, None, :],
+                               noise * smax[:, :, None] * eps_scale, panels)
+        u, s = lsvd.merge_panels_svd(panels)
     else:
-        raise ValueError(f"unknown local_mode {local_mode!r}")
-    panels = jax.vmap(lsvd.proxy_panel)(*us)  # (D, M, M)
-    if undetermined_tail:
-        u_all, s_all = us
-        smax = jnp.max(s_all, axis=1, keepdims=True)          # (D, 1)
-        dead = s_all <= 1e-9 * smax                           # (D, M)
-        nkeys = jax.random.split(jax.random.fold_in(key, 0xDEAD), num_blocks)
-        noise = jax.vmap(
-            lambda k, p: jax.random.normal(k, p.shape, p.dtype))(
-                nkeys, panels)
-        eps_scale = jnp.sqrt(jnp.finfo(panels.dtype).eps)
-        panels = jnp.where(dead[:, None, :],
-                           noise * smax[:, :, None] * eps_scale, panels)
-    return lsvd.merge_panels_svd(panels)
+        raise ValueError(f"unknown merge_mode {merge_mode!r}")
+
+    if not want_right:
+        return u, s
+    return u, s, right_vectors_stack(blocks, u, s)
+
+
+def ranky_svd(
+    a: BlockInput,
+    *,
+    num_blocks: int,
+    method: str = "neighbor_random",
+    local_mode: str = "gram",
+    merge_mode: str = "proxy",
+    undetermined_tail: bool = False,
+    rank: Optional[int] = None,
+    oversample: int = 8,
+    power_iters: int = 2,
+    want_right: bool = False,
+    key: Optional[jax.Array] = None,
+):
+    """DEPRECATED legacy entry point — use ``repro.core.api.svd`` with a
+    ``SolveConfig(backend="single", ...)``.
+
+    Thin shim: builds the SolveConfig (centralized validation) and runs
+    the same ``solve_single`` engine ``api.svd`` dispatches to, so the
+    two surfaces are bit-identical.  Returns the legacy (U, S) tuple —
+    or (U, S, V) with ``want_right=True`` (V in padded column order).
+    """
+    import warnings
+
+    from repro.core import api
+
+    warnings.warn(
+        "ranky_svd is deprecated; use repro.core.api.svd with "
+        "SolveConfig(backend='single', ...)", DeprecationWarning,
+        stacklevel=2)
+    cfg = api.SolveConfig(
+        backend="single", method=method, local_mode=local_mode,
+        merge_mode=merge_mode, undetermined_tail=undetermined_tail,
+        rank=rank, oversample=oversample, power_iters=power_iters,
+        want_right=want_right, num_blocks=num_blocks, key=key)
+    return api._run_single(a, cfg)

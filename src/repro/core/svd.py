@@ -200,12 +200,14 @@ def sparse_right_vectors(
     *,
     rcond: float = 1e-7,
 ) -> jnp.ndarray:
-    """Sparse-native right_vectors: V_blk (W, M) for one repaired sparse
-    block.  A_blk^T @ U reduces to one (C, M) x (M, M) matmul over stored
-    columns scattered to their local ids, plus the repair rows of U."""
+    """Sparse-native right_vectors: V_blk (W, r) for one repaired sparse
+    block.  A_blk^T @ U reduces to one (C, M) x (M, r) matmul over stored
+    columns scattered to their local ids, plus the repair rows of U.
+    U may be square (exact paths) or truncated (M, r) (hierarchical
+    truncated merge)."""
     m = u.shape[0]
     panel = sparse.stored_col_panel(col_rows, col_vals, m)   # (C, M)
-    atu = jnp.zeros((width, m), u.dtype).at[col_ids].add(panel @ u)
+    atu = jnp.zeros((width, u.shape[1]), u.dtype).at[col_ids].add(panel @ u)
     atu = atu.at[repair_cols].add(repair_mask[:, None] * u)
     smax = jnp.max(s)
     inv = jnp.where(s > rcond * smax, 1.0 / jnp.where(s == 0, 1.0, s), 0.0)
