@@ -5,7 +5,7 @@ and optionally machine-readable JSON.
   PYTHONPATH=src python -m benchmarks.run [--full] [--skip-lm] \
       [--only SECTION] [--json OUT.json]
 
-Sections: paper, rank_problem, merge, sparse, randomized, lm.
+Sections: paper, rank_problem, merge, sparse, randomized, streaming, lm.
 ``--only SECTION`` runs just that section and ``--json OUT.json``
 additionally writes one record per row with the fields CI consumes:
 ``section``, ``name``, ``shape`` ("MxN" parsed from the name, null when
@@ -19,7 +19,8 @@ import json
 import re
 import sys
 
-SECTIONS = ("paper", "rank_problem", "merge", "sparse", "randomized", "lm")
+SECTIONS = ("paper", "rank_problem", "merge", "sparse", "randomized",
+            "streaming", "lm")
 
 _SHAPE_RE = re.compile(r"(\d+)x(\d+)")
 _ERR_RE = re.compile(
@@ -87,6 +88,14 @@ def _run_randomized(rows, full: bool) -> None:
         rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
 
 
+def _run_streaming(rows, full: bool) -> None:
+    from benchmarks import streaming
+    print("# streaming svd_update vs from-scratch re-solve", flush=True)
+    for r in streaming.run(**({"batch_sizes": (32, 128, 512, 2048)}
+                              if full else {})):
+        rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
+
+
 def _run_lm(rows, full: bool) -> None:
     from benchmarks import lm_step
     print("# lm steps (reduced configs)", flush=True)
@@ -101,6 +110,7 @@ _RUNNERS = {
     "merge": _run_merge,
     "sparse": _run_sparse,
     "randomized": _run_randomized,
+    "streaming": _run_streaming,
     "lm": _run_lm,
 }
 

@@ -1,0 +1,85 @@
+"""Streaming SVD: a minimal "daily update" service loop.
+
+    PYTHONPATH=src python examples/streaming_svd.py
+
+A day of new user-item interactions arrives as a batch of sparse rows;
+``svd_update`` folds it into the running truncated factorization by
+merge-and-truncate (cost independent of the rows already ingested) and
+the state is checkpointed after every day.  Mid-stream the example
+"crashes", restores the last checkpoint, and continues — the resumed
+stream is bit-identical to the uninterrupted one (the state carries its
+own PRNG chain, so repairs and sketches replay exactly).
+"""
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.core import sparse
+from repro.core.api import ASpec, SolveConfig, plan_update, svd, svd_init, \
+    svd_update
+
+N, DAYS, ROWS_PER_DAY = 4096, 5, 64
+
+
+def day_batch(day: int) -> sparse.COOMatrix:
+    """One day of interactions: new rows over the fixed column universe."""
+    return sparse.ensure_full_row_rank(
+        sparse.random_bipartite(ROWS_PER_DAY, N, 1e-2, seed=100 + day,
+                                weighted=True), seed=100 + day)
+
+
+def main():
+    cfg = SolveConfig(method="neighbor_random", truncate_rank=32,
+                      oversample=16, num_blocks=8)
+
+    # Capacity planning before any data exists: rule R5 answers "does
+    # one day's ingest fit this device" from the batch shape alone.
+    p = plan_update(ASpec(m=ROWS_PER_DAY, n=N, nnz=ROWS_PER_DAY * 8,
+                          num_blocks=8), cfg)
+    print("--- R5 plan for one day ---")
+    print(p.explain())
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        ck = Checkpointer(ckdir)
+        state = svd_init(N, cfg)
+        for day in range(DAYS):
+            res = svd_update(state, day_batch(day), cfg)
+            state = res.state
+            ck.save(day, state, blocking=True)
+            print(f"day {day}: rows_seen={state.rows_seen} "
+                  f"rank={state.rank} "
+                  f"repaired={res.diagnostics.repaired_rows} lonely rows "
+                  f"[{res.diagnostics.wall_time_s * 1e3:.0f}ms]")
+
+        # --- crash and resume ---------------------------------------
+        restored, meta = ck.restore()  # latest step
+        print(f"restored checkpoint of day {meta['step']} "
+              f"(rows_seen={restored.rows_seen})")
+        next_day = day_batch(DAYS)
+        res_a = svd_update(state, next_day, cfg)
+        res_b = svd_update(restored, next_day, cfg)
+        bitwise = all(
+            np.array_equal(np.asarray(getattr(res_a.state, f)),
+                           np.asarray(getattr(res_b.state, f)))
+            for f in ("u", "s", "v"))
+        print(f"resumed stream bit-identical to uninterrupted: {bitwise}")
+        assert bitwise
+
+        # The streamed factors track a from-scratch solve of everything.
+        state = res_a.state
+        everything = np.concatenate(
+            [day_batch(d).todense() for d in range(DAYS + 1)], axis=0)
+        oracle = svd(everything, SolveConfig(method="none", num_blocks=8,
+                                             backend="single",
+                                             merge_mode="gram"))
+        s_true = np.asarray(oracle.s)[:16]
+        rel = float(np.abs(np.asarray(state.s)[:16] - s_true).max()
+                    / s_true[0])
+        print(f"top-16 singular values vs from-scratch oracle: "
+              f"rel_err={rel:.2e} (state rank {state.rank}, "
+              f"{state.rows_seen} rows ingested)")
+
+
+if __name__ == "__main__":
+    main()

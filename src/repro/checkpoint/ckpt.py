@@ -11,10 +11,26 @@ a background thread so the train loop never blocks on I/O.  Restore is
 shardings the (possibly different-sized) new mesh prescribes — this is
 the failure-recovery path: lose a pod, rebuild a smaller mesh, restore,
 continue.
+
+Beyond dict/list/tuple trees, any *registered pytree dataclass* — a
+frozen dataclass exposing ``tree_flatten() -> (children, aux)`` and
+``tree_unflatten(aux, children)``, like ``sparse.BlockEll``,
+``sparse.RepairedSparseBlocks`` or ``stream.StreamingSVDState`` — is
+checkpointable as-is: save expands it into its children plus two
+marker leaves (``__type__``: the import path, ``__aux__``: the static
+aux data as JSON) and restore rebuilds the exact same object via
+``tree_unflatten``.  Children may be arrays, ``None`` (round-trips
+through a string sentinel), non-empty dicts, or nested registered
+dataclasses; bare list/tuple and empty-dict children are rejected at
+save time (neither would survive the string-keyed rebuild).  The arrays round-trip bit-identically (npz is lossless), so
+a restored ``StreamingSVDState`` continues a stream bit-identically —
+pinned by tests/test_streaming.py.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
+import importlib
 import json
 import os
 import shutil
@@ -24,17 +40,69 @@ from typing import Any, Dict, Optional
 import numpy as np
 import jax
 
+# String sentinels for things npz cannot carry natively.  They live in
+# ordinary unicode arrays, so no pickling is ever needed on load.
+_TYPE_KEY = "__type__"
+_AUX_KEY = "__aux__"
+_NONE_SENTINEL = "__none__"
+
+
+def _is_pytree_dataclass(node) -> bool:
+    return (dataclasses.is_dataclass(node) and not isinstance(node, type)
+            and hasattr(node, "tree_flatten")
+            and hasattr(type(node), "tree_unflatten"))
+
+
+def _resolve_type(spec: str):
+    """Import ``module:QualName`` back into the class object."""
+    module, _, qual = spec.partition(":")
+    obj = importlib.import_module(module)
+    for part in qual.split("."):
+        obj = getattr(obj, part)
+    return obj
+
 
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
 
     def rec(node, path):
         if isinstance(node, dict):
+            for k in (_TYPE_KEY, _AUX_KEY):
+                if k in node:
+                    raise ValueError(
+                        f"checkpoint tree dict at {'/'.join(path) or '<root>'} "
+                        f"uses the reserved key {k!r} (it marks registered "
+                        f"pytree dataclasses on restore); rename it")
             for k, v in node.items():
                 rec(v, path + (str(k),))
         elif isinstance(node, (list, tuple)):
             for i, v in enumerate(node):
                 rec(v, path + (str(i),))
+        elif _is_pytree_dataclass(node):
+            children, aux = node.tree_flatten()
+            t = type(node)
+            for i, c in enumerate(children):
+                # A list/tuple child would flatten into numeric
+                # sub-keys and restore as a string-keyed dict handed
+                # straight to tree_unflatten, and an EMPTY dict child
+                # emits no keys at all (restore would miscount the
+                # children) — reject both loudly instead of writing a
+                # checkpoint that cannot restore.
+                if isinstance(c, (list, tuple)) or \
+                        (isinstance(c, dict) and not c):
+                    raise TypeError(
+                        f"checkpointing {t.__qualname__}: child {i} is "
+                        f"{'an empty dict' if isinstance(c, dict) else 'a ' + type(c).__name__}; "
+                        f"pytree-dataclass children must be arrays, "
+                        f"None, non-empty dicts, or registered "
+                        f"dataclasses (wrap sequences in a dict)")
+            # Marker leaves are written directly (the dict branch above
+            # rejects these reserved keys in USER dicts).
+            flat["/".join(path + (_TYPE_KEY,))] = \
+                f"{t.__module__}:{t.__qualname__}"
+            flat["/".join(path + (_AUX_KEY,))] = json.dumps(list(aux))
+            for i, c in enumerate(children):
+                rec(c, path + (f"c{i}",))
         else:
             flat["/".join(path)] = node
 
@@ -53,10 +121,43 @@ def _unflatten(flat: Dict[str, Any]):
     return tree
 
 
+def _rebuild(node):
+    """Reconstruct registered pytree dataclasses (bottom-up) from the
+    marker dicts ``_flatten`` wrote."""
+    if not isinstance(node, dict):
+        return node
+    if _TYPE_KEY in node:
+        cls = _resolve_type(str(node[_TYPE_KEY]))
+        aux = tuple(json.loads(str(node[_AUX_KEY])))
+        n_children = len(node) - 2
+        children = tuple(_rebuild(node[f"c{i}"]) for i in range(n_children))
+        return cls.tree_unflatten(aux, children)
+    return {k: _rebuild(v) for k, v in node.items()}
+
+
+def _encode_leaf(v) -> np.ndarray:
+    return np.asarray(_NONE_SENTINEL) if v is None else np.asarray(v)
+
+
+def _decode_leaf(v):
+    if (isinstance(v, np.ndarray) and v.dtype.kind == "U" and v.ndim == 0
+            and str(v) == _NONE_SENTINEL):
+        return None
+    return v
+
+
 def tree_signature(tree) -> str:
+    """Structure hash: array shapes/dtypes plus — for registered pytree
+    dataclasses — the type and aux CONTENT (aux is static pytree
+    structure, so e.g. a state with different counters signs
+    differently, deliberately; string leaves hash by value, not by the
+    accident of their unicode dtype width)."""
     flat = _flatten(tree)
     desc = json.dumps(
-        {k: [list(np.shape(v)), str(np.asarray(v).dtype if not hasattr(v, "dtype") else v.dtype)]
+        {k: ("None" if v is None else
+             ["str", v] if isinstance(v, str) else
+             [list(np.shape(v)),
+              str(np.asarray(v).dtype if not hasattr(v, "dtype") else v.dtype)])
          for k, v in sorted(flat.items())})
     return hashlib.sha1(desc.encode()).hexdigest()[:16]
 
@@ -77,7 +178,7 @@ class Checkpointer:
         flat = _flatten(tree)
         # Snapshot to host memory NOW (cheap device->host copy), write in
         # the background so the step loop continues immediately.
-        host = {k: np.asarray(v) for k, v in flat.items()}
+        host = {k: _encode_leaf(v) for k, v in flat.items()}
         path = os.path.join(self.directory, f"step_{step:08d}")
         meta = {
             "step": step,
@@ -143,16 +244,27 @@ class Checkpointer:
                 f"checkpoint signature {meta['signature']} != expected "
                 f"{expect_signature} (model/optimizer config changed?)")
         arrs = np.load(os.path.join(path, "arrays.npz"))
-        flat = {k: arrs[k] for k in arrs.files}
+        flat = {k: _decode_leaf(arrs[k]) for k in arrs.files}
         tree = _unflatten(flat)
+
+        def _is_marker(x):
+            # Type/aux marker strings stay host-side; device_put would
+            # choke on unicode arrays.
+            return isinstance(x, np.ndarray) and x.dtype.kind == "U"
+
         if shardings is not None:
             flat_sh = _flatten(shardings)
 
             def put(key, x):
+                if x is None or _is_marker(x):
+                    return x
                 sh = flat_sh.get(key)
                 return jax.device_put(x, sh) if sh is not None else jax.device_put(x)
 
             tree = _unflatten({k: put(k, v) for k, v in _flatten(tree).items()})
         else:
-            tree = jax.tree.map(jax.device_put, tree)
-        return tree, meta
+            tree = jax.tree.map(
+                lambda x: x if _is_marker(x) else jax.device_put(x), tree)
+        # Rebuild registered pytree dataclasses LAST, once every array
+        # child is on device (markers are consumed here).
+        return _rebuild(tree), meta

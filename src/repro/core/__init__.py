@@ -39,6 +39,10 @@ from repro.core.api import (  # noqa: F401
     SVDResult,
     Diagnostics,
     plan,
+    plan_update,
+    svd_init,
+    svd_stream,
+    svd_update,
 )
 from repro.core.planner import ASpec, Plan, PlanError  # noqa: F401
 
@@ -46,6 +50,8 @@ __all__ = [
     # the unified front door
     "api", "SolveConfig", "SVDResult", "Diagnostics", "plan",
     "ASpec", "Plan", "PlanError", "planner", "default_key",
+    # the streaming front door (repro.stream underneath)
+    "svd_init", "svd_update", "svd_stream", "plan_update",
     # legacy drivers (deprecation shims over the same engines)
     "ranky_svd", "hierarchical_ranky_svd", "distributed_ranky_svd",
     # submodules

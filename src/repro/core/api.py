@@ -16,6 +16,11 @@ diverging keyword surfaces.  This module unifies them:
   (lonely/repaired row counts, estimated peak bytes, wall time).
 * :func:`plan` — the planner alone: what WOULD ``svd`` do for a matrix
   of this shape, and why.
+* :func:`svd_init` / :func:`svd_update` / :func:`svd_stream` — the
+  STREAMING front door (``repro.stream`` underneath): fold batches of
+  new rows into a long-lived truncated factorization by
+  merge-and-truncate, with :func:`plan_update` answering rule R5's
+  "does one ingest fit this device" from the batch shape alone.
 
 The legacy entry points (``ranky.ranky_svd``,
 ``hierarchy.hierarchical_ranky_svd``, ``distributed.distributed_ranky_svd``)
@@ -104,6 +109,12 @@ class SolveConfig:
       backend, proxy merge, exact only).
     * ``two_level`` — shard_map backend: two-level (intra/inter pod)
       proxy merge over two mesh block axes.
+    * ``truncate_rank`` — streaming only (``svd_update`` /
+      ``svd_stream``): the rank k the merge-and-truncate state is
+      re-truncated to after every ingest.  Required for streaming.
+    * ``history_decay`` — streaming only: multiply the retained
+      singular values by this factor before every merge (1.0 = plain
+      concatenation semantics; < 1 forgets old rows exponentially).
     * ``memory_budget_bytes`` — planner budget (default 4 GiB).
     * ``key`` — PRNG key; ``None`` means ``default_key()``.
     """
@@ -122,6 +133,8 @@ class SolveConfig:
     use_kernel: bool = False
     undetermined_tail: bool = False
     two_level: bool = False
+    truncate_rank: Optional[int] = None
+    history_decay: float = 1.0
     memory_budget_bytes: Optional[int] = None
     key: Optional[jax.Array] = None
 
@@ -156,6 +169,14 @@ class SolveConfig:
         if self.fanout < 2:
             raise ValueError(f"invalid SolveConfig: fanout={self.fanout} "
                              f"must be >= 2")
+        if self.truncate_rank is not None and self.truncate_rank < 1:
+            raise ValueError(
+                f"invalid SolveConfig: truncate_rank={self.truncate_rank} "
+                f"must be >= 1 (or None outside the streaming path)")
+        if not 0.0 < self.history_decay <= 1.0:
+            raise ValueError(
+                f"invalid SolveConfig: history_decay={self.history_decay} "
+                f"must be in (0, 1] (1.0 = no forgetting)")
         if (self.memory_budget_bytes is not None
                 and self.memory_budget_bytes < 1):
             raise ValueError(
@@ -202,6 +223,18 @@ class SolveConfig:
             raise _bad("local_mode", "svd", "use_kernel", True,
                        "the Pallas kernels accelerate the gram path; "
                        "local_mode='svd' never forms a gram")
+        if self.truncate_rank is not None and self.undetermined_tail:
+            raise _bad("truncate_rank", self.truncate_rank,
+                       "undetermined_tail", True,
+                       "the streaming merge-and-truncate never builds "
+                       "proxy panels, so the rank-problem emulation "
+                       "cannot apply; drop one of the two")
+        if self.history_decay != 1.0 and self.truncate_rank is None:
+            raise _bad("history_decay", self.history_decay,
+                       "truncate_rank", None,
+                       "history decay only applies to the streaming "
+                       "merge (svd_update / svd_stream); set "
+                       "truncate_rank=k to stream")
 
     def resolved_key(self) -> jax.Array:
         """The PRNG key this solve runs with (``default_key()`` if
@@ -236,6 +269,11 @@ class SVDResult:
     ``u, s, v = result`` when ``want_right=True``).  ``v`` rows are in
     ORIGINAL column order (the adapter's zero-column padding is trimmed
     back off).
+
+    Streaming solves (``svd_update`` / ``svd_stream``) additionally
+    carry the updated :class:`~repro.stream.state.StreamingSVDState` in
+    ``state`` — pass it to the next ``svd_update`` (one-shot solves
+    leave it ``None``).
     """
 
     u: jnp.ndarray
@@ -243,6 +281,7 @@ class SVDResult:
     v: Optional[jnp.ndarray]
     plan: Plan
     diagnostics: Diagnostics
+    state: Optional[Any] = None
 
     def __iter__(self):
         yield self.u
@@ -363,17 +402,6 @@ def _run_shard_map(a, mesh, config: SolveConfig, *, block_axes=None):
 # Diagnostics
 # ---------------------------------------------------------------------------
 
-def _lonely_per_block(a_norm, num_blocks: int) -> Tuple[int, ...]:
-    if isinstance(a_norm, sparse.BlockEll):
-        lonely = jax.vmap(
-            lambda rows, vals: ranky.sparse_lonely_rows(rows, vals, a_norm.m)
-        )(a_norm.col_rows, a_norm.col_vals)
-        return tuple(int(x) for x in np.asarray(lonely.sum(axis=1)))
-    m, n = a_norm.shape
-    blocks = np.asarray(a_norm).reshape(m, num_blocks, n // num_blocks)
-    return tuple(int(x) for x in (~(blocks != 0).any(axis=2)).sum(axis=0))
-
-
 def _repaired_rows(a_norm, num_blocks: int, method: str, key: jax.Array,
                    lonely_total: int, m: int) -> Optional[int]:
     if method == "none":
@@ -386,7 +414,7 @@ def _repaired_rows(a_norm, num_blocks: int, method: str, key: jax.Array,
     repaired = ranky.split_and_repair(a_norm, num_blocks, method, key)
     if isinstance(repaired, sparse.RepairedSparseBlocks):
         return int(np.asarray(repaired.repair_mask).sum())
-    after = sum(_lonely_per_block(
+    after = sum(ranky.lonely_rows_per_block(
         jnp.transpose(repaired, (1, 0, 2)).reshape(m, -1), num_blocks))
     return lonely_total - after
 
@@ -403,7 +431,7 @@ def plan(a: Union[MatrixInput, ASpec], config: Optional[SolveConfig] = None,
     :class:`~repro.core.planner.ASpec` — so capacity planning needs no
     data, only shapes.
     """
-    config = _coerce_config(config, overrides)
+    config = _reject_stream_knobs(_coerce_config(config, overrides), "plan")
     if isinstance(a, ASpec):
         spec = (a if config.num_blocks in (None, a.num_blocks)
                 else dataclasses.replace(a, num_blocks=config.num_blocks))
@@ -437,6 +465,17 @@ def _coerce_config(config: Optional[SolveConfig],
     return dataclasses.replace(config, **overrides) if overrides else config
 
 
+def _reject_stream_knobs(config: SolveConfig, fn: str) -> SolveConfig:
+    """One-shot entry points never consult the streaming knobs — raising
+    beats silently returning an untruncated result."""
+    if config.truncate_rank is not None:
+        raise ValueError(
+            f"truncate_rank={config.truncate_rank} is a streaming knob "
+            f"(svd_update / svd_stream) and {fn}() never truncates a "
+            f"state; for a one-shot truncated solve set rank=k instead")
+    return config
+
+
 def svd(a: MatrixInput, config: Optional[SolveConfig] = None, *,
         mesh=None, block_axes=None, **overrides) -> SVDResult:
     """Distributed Ranky SVD of ``a`` — the one public entry point.
@@ -457,7 +496,7 @@ def svd(a: MatrixInput, config: Optional[SolveConfig] = None, *,
     ``want_right`` (rows in original column order), the explainable
     :class:`~repro.core.planner.Plan`, and :class:`Diagnostics`.
     """
-    config = _coerce_config(config, overrides)
+    config = _reject_stream_knobs(_coerce_config(config, overrides), "svd")
     if mesh is not None and config.backend not in ("shard_map", "auto"):
         raise ValueError(
             f"mesh= was provided but config.backend={config.backend!r}; a "
@@ -521,7 +560,7 @@ def svd(a: MatrixInput, config: Optional[SolveConfig] = None, *,
         v = v[:spec.n]  # trim the adapter's zero-column padding back off
     wall = time.perf_counter() - t0
 
-    lonely = _lonely_per_block(a_norm, d)
+    lonely = ranky.lonely_rows_per_block(a_norm, d)
     lonely_total = sum(lonely)
     diag = Diagnostics(
         lonely_rows_per_block=lonely,
@@ -534,3 +573,199 @@ def svd(a: MatrixInput, config: Optional[SolveConfig] = None, *,
         wall_time_s=wall,
     )
     return SVDResult(u=u, s=s, v=v, plan=p, diagnostics=diag)
+
+
+# ---------------------------------------------------------------------------
+# The streaming front door: svd_init / svd_update / svd_stream
+# ---------------------------------------------------------------------------
+
+def _require_stream_config(config: SolveConfig) -> SolveConfig:
+    if config.truncate_rank is None:
+        raise ValueError(
+            "streaming needs SolveConfig.truncate_rank=k — the rank the "
+            "merge-and-truncate state is re-truncated to after every "
+            "ingest (svd_update has no exact fallback; an untruncated "
+            "stream would grow without bound)")
+    if config.backend not in ("auto", "single"):
+        raise ValueError(
+            f"invalid streaming config: backend={config.backend!r} — the "
+            f"incremental merge-and-truncate runs single-host "
+            f"(backend='single' or 'auto'); distributed ingestion is a "
+            f"ROADMAP item")
+    if config.sketch:
+        raise ValueError(
+            "invalid streaming config: sketch=True belongs to the "
+            "hierarchical tree merge; to force the randomized BATCH "
+            "factorization set rank=r instead")
+    if config.local_mode != "gram" or config.merge_mode != "gram":
+        raise ValueError(
+            f"invalid streaming config: local_mode="
+            f"{config.local_mode!r} / merge_mode={config.merge_mode!r} "
+            f"— the streaming batch factorization is gram-native and "
+            f"its merge is the fixed panel SVD; neither knob applies "
+            f"(and the plan would misreport what ran)")
+    return config
+
+
+def _delta_nnz_estimate(delta) -> int:
+    """Cheap nnz for the R5 plan's ASpec.  No R5 byte estimate or
+    decision consults nnz — it is informational (``Plan.explain``) — so
+    the ingest hot path must not scan or device-to-host-copy the batch
+    for it: exact O(1) for COO, stored-slot capacity (an upper bound,
+    no transfer) for BlockEll, m*n for dense."""
+    if isinstance(delta, sparse.COOMatrix):
+        return delta.nnz
+    if isinstance(delta, sparse.BlockEll):
+        return int(np.prod(delta.col_vals.shape))
+    shape = getattr(delta, "shape", None) or np.shape(delta)
+    return int(shape[0]) * int(shape[1])  # shape metadata, data untouched
+
+
+def _batch_universe(delta) -> Tuple[int, Optional[int]]:
+    """(n, num_blocks-or-None) a fresh stream should adopt from its
+    first delta."""
+    from repro import stream as streaming
+
+    _, n = streaming.delta_shape(delta)
+    d = delta.num_blocks if isinstance(delta, sparse.BlockEll) else None
+    return n, d
+
+
+def svd_init(n: int, config: Optional[SolveConfig] = None,
+             **overrides):
+    """A fresh rank-0 streaming state over an ``n``-column universe.
+
+    ``num_blocks`` resolves like everywhere else: explicit config wins,
+    else the planner default.  The state's PRNG chain root is
+    ``config.key`` (``default_key()`` when unset), so an unkeyed stream
+    is reproducible like every other driver.
+    """
+    from repro import stream as streaming
+
+    config = _require_stream_config(_coerce_config(config, overrides))
+    d = config.num_blocks or planner.DEFAULT_NUM_BLOCKS
+    return streaming.init_state(n, num_blocks=d, key=config.resolved_key())
+
+
+def plan_update(batch: Union[MatrixInput, ASpec],
+                config: Optional[SolveConfig] = None, *,
+                state=None, **overrides) -> Plan:
+    """What would :func:`svd_update` do for this batch, and why (rule
+    R5).  ``batch`` may be an :class:`~repro.core.planner.ASpec` — so
+    "can I fold a 1M-row day of data into this model on one device" is
+    answerable with no data, only shapes — or an actual delta, in which
+    case ``state`` supplies the column universe."""
+    from repro import stream as streaming
+
+    config = _require_stream_config(_coerce_config(config, overrides))
+    if isinstance(batch, ASpec):
+        return planner.make_stream_plan(batch, config)
+    if state is None:
+        raise ValueError(
+            "plan_update needs state= (for the column universe) when "
+            "batch is an actual delta; pass an ASpec to plan from "
+            "shapes alone")
+    m_b, _ = streaming.delta_shape(batch)
+    spec = ASpec(m=m_b, n=state.n, nnz=_delta_nnz_estimate(batch),
+                 num_blocks=state.num_blocks, kind="stream")
+    p = planner.make_stream_plan(spec, config)
+    # R5's closed form covers the merge working set; with a real state
+    # in hand the (linear-in-rows-seen) left-factor update is concrete,
+    # so say it out loud.
+    u_bytes = planner.BYTES_F32 * 2 * (state.rows_seen + m_b) \
+        * config.truncate_rank
+    return dataclasses.replace(p, reasons=p.reasons + (
+        f"state has rows_seen={state.rows_seen}: updating its left "
+        f"factor u touches a further ~{u_bytes:,}B (linear in rows "
+        f"seen; excluded from the R5 peak)",))
+
+
+def svd_update(state, delta, config: Optional[SolveConfig] = None,
+               **overrides) -> SVDResult:
+    """Fold a batch of new rows into an existing streaming state — the
+    incremental front door (``repro.stream`` underneath).
+
+    Args:
+      state: a :class:`~repro.stream.state.StreamingSVDState` from
+        :func:`svd_init`, a previous result's ``.state``, or a
+        checkpoint restore.
+      delta: the new rows, in the state's column universe — dense
+        (m_b, n) rows, a ``sparse.COOMatrix``, or a pre-split
+        ``sparse.BlockEll`` (sparse deltas run sparse-natively).
+      config: a :class:`SolveConfig` with ``truncate_rank=k`` set;
+        ``history_decay`` < 1 forgets old rows exponentially;
+        ``rank=r`` forces the randomized batch factorization.
+
+    Returns an :class:`SVDResult` whose factors cover EVERY row
+    ingested so far (``u`` in ingestion order, ``v`` trimmed to the
+    original columns when ``want_right``), with the R5 plan, per-batch
+    diagnostics, and the updated ``state`` for the next call.
+    """
+    from repro import stream as streaming
+
+    config = _require_stream_config(_coerce_config(config, overrides))
+    if not isinstance(state, streaming.StreamingSVDState):
+        raise TypeError(
+            f"svd_update needs a StreamingSVDState (from svd_init, a "
+            f"previous result's .state, or a checkpoint restore); got "
+            f"{type(state)}")
+    if (config.num_blocks is not None
+            and config.num_blocks != state.num_blocks):
+        raise ValueError(
+            f"config.num_blocks={config.num_blocks} but the state's "
+            f"column universe has num_blocks={state.num_blocks}; the "
+            f"universe is fixed at svd_init time")
+
+    t0 = time.perf_counter()
+    p = plan_update(delta, config, state=state)
+    new_state, info = streaming.ingest(state, delta, config, p)
+    jax.block_until_ready((new_state.u, new_state.s, new_state.v))
+    wall = time.perf_counter() - t0
+
+    diag = Diagnostics(
+        lonely_rows_per_block=info.lonely_rows_per_block,
+        lonely_rows=info.lonely_rows,
+        repaired_rows=info.repaired_rows,
+        strategy=p.strategy,
+        estimated_peak_bytes=p.estimated_peak_bytes,
+        wall_time_s=wall,
+    )
+    v = new_state.trimmed_v() if config.want_right else None
+    return SVDResult(u=new_state.u, s=new_state.s, v=v, plan=p,
+                     diagnostics=diag, state=new_state)
+
+
+def svd_stream(batches, config: Optional[SolveConfig] = None, *,
+               state=None, **overrides) -> SVDResult:
+    """Ingest a whole sequence of deltas and return the final result.
+
+    Convenience loop over :func:`svd_update`: initializes the state
+    from the first batch's shape (unless ``state`` is given), folds
+    every batch in, and returns the last result with CUMULATIVE
+    diagnostics (lonely/repaired counts summed over THIS call's
+    batches — a resumed stream's pre-existing history is not
+    re-counted — plus total wall time; ``lonely_rows_per_block`` stays
+    the last batch's).
+    """
+    config = _require_stream_config(_coerce_config(config, overrides))
+    batches = list(batches)
+    if not batches:
+        raise ValueError("svd_stream needs at least one batch")
+    t0 = time.perf_counter()
+    if state is None:
+        n, d = _batch_universe(batches[0])
+        cfg0 = config if (d is None or config.num_blocks is not None) \
+            else dataclasses.replace(config, num_blocks=d)
+        state = svd_init(n, cfg0)
+    base_lonely = state.lonely_rows_seen
+    base_repaired = state.repaired_rows_seen
+    res = None
+    for delta in batches:
+        res = svd_update(state, delta, config)
+        state = res.state
+    diag = dataclasses.replace(
+        res.diagnostics,
+        lonely_rows=state.lonely_rows_seen - base_lonely,
+        repaired_rows=state.repaired_rows_seen - base_repaired,
+        wall_time_s=time.perf_counter() - t0)
+    return dataclasses.replace(res, diagnostics=diag)

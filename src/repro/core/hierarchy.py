@@ -26,17 +26,35 @@ from repro.core import ranky
 from repro.core import svd as lsvd
 
 
+def merge_svd(p: jnp.ndarray, rank: int):
+    """SVD-merge a wide (M, R) panel concatenation, truncated to ``rank``.
+
+    The ONE merge primitive of the incremental algorithm, shared by the
+    tree merge below and the streaming merge-and-truncate engine
+    (``repro.stream.ingest``).  Returns ``(U (M, rank), S (rank,),
+    W (R, rank))`` with ``P = U diag(S) W^T + (discarded tail)``; all
+    three are zero-padded when ``rank > min(M, R)`` so output shapes
+    stay static.  ``W`` is what streaming needs: for
+    ``P = [V_old diag(s_old) | B^T U_b]`` it is the small rotation that
+    carries the old and batch left vectors into the merged basis.
+    """
+    m, rtot = p.shape
+    u, s, wt = jnp.linalg.svd(p, full_matrices=False)
+    k = min(m, rtot)
+    if k < rank:
+        u = jnp.pad(u, ((0, 0), (0, rank - k)))
+        s = jnp.pad(s, (0, rank - k))
+        wt = jnp.pad(wt, ((0, rank - k), (0, 0)))
+    return u[:, :rank], s[:rank], wt[:rank].T
+
+
 @partial(jax.jit, static_argnames=("rank",))
 def _merge_group(panels: jnp.ndarray, rank: int) -> jnp.ndarray:
     """SVD-merge a (G, M, r) group of panels into one (M, rank) panel."""
     g, m, r = panels.shape
     p = jnp.transpose(panels, (1, 0, 2)).reshape(m, g * r)
-    u, s, _ = jnp.linalg.svd(p, full_matrices=False)
-    k = min(m, g * r)
-    if k < rank:
-        u = jnp.pad(u, ((0, 0), (0, rank - k)))
-        s = jnp.pad(s, (0, rank - k))
-    return u[:, :rank] * s[None, :rank]
+    u, s, _ = merge_svd(p, rank)
+    return u * s[None, :]
 
 
 def solve_hierarchical(

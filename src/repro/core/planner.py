@@ -26,6 +26,21 @@ tests/test_api.py against hand-computed values):
   selected by request (``backend="hierarchical"`` / ``sketch=True``),
   not by the auto rules, because its leaf factorizations transiently
   need as much memory as the flat strategies.
+* ``streaming_bytes``    — rule R5, for :func:`make_stream_plan` (the
+  ``api.svd_update`` merge-and-truncate path): one ingest peaks at the
+  BATCH factorization (``exact_bytes`` of the batch spec, M = batch
+  rows, or ``sketch_bytes`` evaluated at the rank the batch sketch
+  actually runs — ``l_b``, internal width ``min(l_b + p, m)``) plus
+  ``stream_merge_bytes`` = ``4 * 2 * N_pad * (k + l_b)`` for the
+  (N_pad, k + l_b) merge panel and its SVD workspace, with
+  ``l_b = min(k + oversample, batch_m)``.  The closed form covers the
+  merge WORKING SET and is **independent of the rows already
+  ingested** — that is what makes "fold a 1M-row day of data into this
+  model on one device" answerable from the batch shape alone.  It
+  deliberately excludes the state's own left factor: updating ``u``
+  touches ``~2 * 4 * rows_seen * k`` further bytes, linear (never
+  quadratic) in rows seen — ``api.plan_update`` reports that term when
+  given a real state.
 
 Auto rules (``config.backend == "auto"``), first match wins:
 
@@ -119,6 +134,44 @@ def hierarchical_bytes(spec: ASpec, rank: Optional[int]) -> int:
     """Tree-merge level-0 panel stack (D, M, r)."""
     r = spec.m if rank is None else min(rank, spec.m)
     return BYTES_F32 * spec.num_blocks * spec.m * r
+
+
+def stream_panel_width(rank: int, oversample: int, batch_m: int) -> int:
+    """l_b = min(rank + oversample, batch rows) — the batch's merge-panel
+    width (how many columns the batch contributes to the R5 merge)."""
+    return min(rank + oversample, batch_m)
+
+
+def stream_merge_bytes(batch: ASpec, rank: int, oversample: int, *,
+                       batch_rank: Optional[int] = None) -> int:
+    """R5 merge term: the (N_pad, k + r_b) stacked panel
+    [V diag(s) | B^T U_b] plus an equal-sized SVD workspace, with
+    ``r_b = l_b`` by default or an explicitly forced ``batch_rank``.
+    No term depends on the rows already ingested."""
+    r_b = (stream_panel_width(rank, oversample, batch.m)
+           if batch_rank is None else min(batch_rank, batch.m))
+    n_pad = batch.num_blocks * batch.width
+    return BYTES_F32 * 2 * n_pad * (rank + r_b)
+
+
+def streaming_bytes(batch: ASpec, rank: int, oversample: int, *,
+                    exact: bool, batch_rank: Optional[int] = None) -> int:
+    """R5 total: one ``svd_update`` peak = batch factorization (exact
+    gram stack or randomized sketch of the BATCH — ``batch.m`` is the
+    batch row count, not the rows seen) + the merge panel.
+
+    The batch keeps ``r_b`` directions through the merge — ``l_b`` by
+    default, or an explicitly forced ``batch_rank`` — so the sketch
+    term is estimated at rank ``r_b`` (internal width
+    ``min(r_b + oversample, m)``), exactly the width the engine
+    allocates, and the merge panel is (N_pad, rank + r_b).
+    """
+    r_b = (stream_panel_width(rank, oversample, batch.m)
+           if batch_rank is None else min(batch_rank, batch.m))
+    base = (exact_bytes(batch) if exact
+            else sketch_bytes(batch, r_b, oversample))
+    return base + stream_merge_bytes(batch, rank, oversample,
+                                     batch_rank=batch_rank)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -290,3 +343,82 @@ def make_plan(spec: ASpec, config, *, device_count: int = 1,
             f"shard_map over {device_count} devices (one column block "
             f"per device)")
     return finish(backend, exact_strategy(), reasons)
+
+
+def make_stream_plan(batch: ASpec, config) -> Plan:
+    """Rule R5: plan one streaming ``svd_update`` from the BATCH shape.
+
+    ``batch`` describes the incoming delta (``m`` = batch rows, ``n`` /
+    ``num_blocks`` = the state's column universe).  The only decision is
+    how to factor the batch before the merge — the merge itself is
+    fixed (one (N_pad, k + l_b) panel SVD) and its cost is independent
+    of the rows already ingested, which is the whole point of
+    streaming.  The returned plan's ``rank`` field carries the batch
+    factorization: ``None`` = exact per-block gram stack + eigh,
+    ``r`` = randomized rank-r sketch.  ``config.rank``, when set,
+    forces the sketch explicitly (same meaning as in one-shot solves).
+
+    Like R3, R5 never raises: streaming was explicitly requested, so
+    when nothing fits the budget the planner degrades honestly to the
+    cheaper batch factorization and says so.
+    """
+    k = config.truncate_rank
+    if k is None:
+        raise ValueError(
+            "make_stream_plan needs SolveConfig.truncate_rank=k (the "
+            "streaming truncation rank); got truncate_rank=None")
+    budget = config.memory_budget_bytes or DEFAULT_MEMORY_BUDGET
+    l_b = stream_panel_width(k, config.oversample, batch.m)
+    merge = stream_merge_bytes(batch, k, config.oversample)
+    est = {
+        "stream_exact": streaming_bytes(batch, k, config.oversample,
+                                        exact=True),
+        "stream_sketch": streaming_bytes(batch, k, config.oversample,
+                                         exact=False),
+    }
+    r5 = (f"R5: streaming merge-and-truncate — per-update peak = batch "
+          f"factorization + {merge:,}B merge panel "
+          f"(2 * N_pad * (k={k} + l_b={l_b}) floats), independent of "
+          f"rows already ingested (excludes the state's left-factor "
+          f"update, ~8*rows_seen*k B, linear in rows seen)")
+
+    def finish(rank, peak, reasons):
+        return Plan(
+            backend="single", strategy="streaming", method=config.method,
+            merge_mode=config.merge_mode, local_mode=config.local_mode,
+            rank=rank, truncate_to=None, sketch_leaves=False,
+            num_blocks=batch.num_blocks, spec=batch, estimates=dict(est),
+            budget=budget, reasons=tuple(reasons), peak_bytes=peak)
+
+    if config.rank is not None:
+        # The forced sketch runs at rank=config.rank, not l_b — estimate
+        # the width the engine will actually allocate.
+        est["stream_sketch"] = streaming_bytes(
+            batch, k, config.oversample, exact=False,
+            batch_rank=config.rank)
+        return finish(min(config.rank, batch.m), est["stream_sketch"], [
+            r5, f"rank={config.rank} requested explicitly — randomized "
+                f"batch factorization ({est['stream_sketch']:,}B)"])
+    if est["stream_exact"] <= budget and batch.m <= EXACT_TRUNC_MAX_M:
+        return finish(None, est["stream_exact"], [
+            r5, f"exact batch factorization — {est['stream_exact']:,}B "
+                f"fits the budget ({budget:,}B) and batch rows "
+                f"{batch.m} <= {EXACT_TRUNC_MAX_M} (more accurate than "
+                f"the sketch)"])
+    why = (f"exceeds the budget ({budget:,}B)"
+           if est["stream_exact"] > budget
+           else f"batch rows {batch.m} > exact ceiling {EXACT_TRUNC_MAX_M}")
+    if est["stream_sketch"] <= budget:
+        return finish(l_b, est["stream_sketch"], [
+            r5, f"the exact batch gram stack needs "
+                f"{est['stream_exact']:,}B which {why}; the "
+                f"(k+p)-row batch sketch fits at "
+                f"{est['stream_sketch']:,}B"])
+    cheaper_exact = est["stream_exact"] <= est["stream_sketch"]
+    rank = None if cheaper_exact else l_b
+    peak = est["stream_exact"] if cheaper_exact else est["stream_sketch"]
+    return finish(rank, peak, [
+        r5, f"NO batch factorization fits the budget ({budget:,}B): "
+            f"exact {est['stream_exact']:,}B, sketch "
+            f"{est['stream_sketch']:,}B; proceeding with the cheaper "
+            f"{'exact gram stack' if cheaper_exact else 'sketch'}"])

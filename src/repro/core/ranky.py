@@ -172,6 +172,21 @@ def sparse_lonely_rows(
     return sparse_row_counts(col_rows, col_vals, m) == 0
 
 
+def lonely_rows_per_block(a_norm, num_blocks: int) -> Tuple[int, ...]:
+    """Per-block lonely-row counts of a normalized input — dense
+    (M, N_pad) array (N_pad divisible by num_blocks) or BlockEll.  The
+    shared diagnostics helper behind ``api.svd`` and ``stream.ingest``
+    (host-side tuple of ints)."""
+    if isinstance(a_norm, sparse.BlockEll):
+        lonely = jax.vmap(
+            lambda rows, vals: sparse_lonely_rows(rows, vals, a_norm.m)
+        )(a_norm.col_rows, a_norm.col_vals)
+        return tuple(int(x) for x in np.asarray(lonely.sum(axis=1)))
+    m, n = a_norm.shape
+    blocks = np.asarray(a_norm).reshape(m, num_blocks, n // num_blocks)
+    return tuple(int(x) for x in (~(blocks != 0).any(axis=2)).sum(axis=0))
+
+
 def row_adjacency_sparse(ell: "sparse.BlockEll") -> jnp.ndarray:
     """Global row adjacency from the blocked sparse container: psum-style
     sum of per-block binarized grams (counts of shared stored columns),

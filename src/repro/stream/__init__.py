@@ -1,0 +1,22 @@
+"""Streaming SVD: the incremental merge-and-truncate subsystem.
+
+Turns the one-shot solver into a long-lived service: a checkpointable
+:class:`~repro.stream.state.StreamingSVDState` plus an
+:func:`~repro.stream.ingest.ingest` engine that folds batches of new
+rows (dense, COO, or BlockEll deltas) into the truncated factorization
+via Ranky-repaired, sparse-native batch factorization and a
+hierarchy-style panel merge.  The public front door lives at
+``repro.core.api.svd_update`` / ``svd_stream`` / ``svd_init``.
+"""
+from repro.stream.ingest import IngestInfo, ingest  # noqa: F401
+from repro.stream.state import (  # noqa: F401
+    StreamingSVDState,
+    as_delta,
+    delta_shape,
+    init_state,
+)
+
+__all__ = [
+    "StreamingSVDState", "init_state", "ingest", "IngestInfo",
+    "as_delta", "delta_shape",
+]

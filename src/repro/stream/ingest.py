@@ -1,0 +1,152 @@
+"""The incremental merge-and-truncate engine behind ``api.svd_update``.
+
+One ingest folds a batch ``B`` of new rows into an existing truncated
+factorization ``A_old ~ U diag(s) V^T`` without ever touching the rows
+already seen:
+
+1. **Normalize** the delta into the state's column universe
+   (``stream.state.as_delta``) — COO deltas become ``BlockEll`` and run
+   sparse-natively end to end.
+2. **Repair** the batch with the configured Ranky checker
+   (``ranky.split_and_repair``) *before* anything is truncated: a
+   rank-deficient batch block leaves its lonely rows with no weight in
+   the truncated factors, and the merge can never recover components a
+   leaf lost (the paper's rank problem, streaming edition — pinned by
+   tests/test_streaming.py).
+3. **Factor** the repaired batch sparse-natively, per the plan's R5
+   decision (core/planner.py): the exact per-block gram stack + eigh
+   when the batch is small enough, otherwise the randomized
+   (k+p)-row sketch (core/randomized.py — Pallas sparse_gram /
+   sketch_panel kernels underneath).  Either way the batch contributes
+   an (n_pad, r_b) right panel ``P_b = B^T U_b`` (= ``V_b diag(s_b)``,
+   computed without any 1/s division).
+4. **Merge and truncate**: with ``P_old = V diag(decay * s)`` the
+   stacked matrix ``K = [diag(decay*s) V^T ; diag(s_b) V_b^T]``
+   satisfies ``[decay*A_old ; B] = blockdiag(U, U_b) @ K``, so one SVD
+   of ``K^T = [P_old | P_b]`` — the same panel merge as the
+   hierarchical tree engine (``hierarchy.merge_svd``) — yields the new
+   ``(V', s')`` plus the small rotation ``U_k`` that updates the left
+   vectors: ``U' = [U @ U_k[:k] ; U_b @ U_k[k:]]``.  Truncation back to
+   ``truncate_rank`` closes the loop.
+
+Nothing in steps 3–4 depends on ``rows_seen``: the merge works on an
+(n_pad, k + r_b) panel and the batch factorization on the batch alone —
+planner rule R5's closed form, ``O(batch + (k+p) * N)`` peak.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hierarchy, randomized, ranky, sparse
+from repro.core import svd as lsvd
+from repro.stream import state as stream_state
+from repro.stream.state import StreamingSVDState
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestInfo:
+    """Side-band observations of one ingest (per batch, not cumulative —
+    the cumulative counters live on the state)."""
+
+    batch_rows: int
+    lonely_rows_per_block: Tuple[int, ...]
+    lonely_rows: int
+    repaired_rows: int
+
+
+def _repaired_count(blocks, lonely_total: int) -> int:
+    """Exact number of side-band repairs the checker made on this batch.
+
+    Sparse blocks carry the repair mask explicitly; dense blocks were
+    repaired in place, so the count is lonely-before minus lonely-after.
+    """
+    if isinstance(blocks, sparse.RepairedSparseBlocks):
+        return int(np.asarray(blocks.repair_mask).sum())
+    still_lonely = jax.vmap(ranky.lonely_rows)(blocks)
+    return lonely_total - int(np.asarray(still_lonely).sum())
+
+
+def _factor_batch(blocks, m_b: int, config, plan, k_batch: jax.Array):
+    """(U_b (m_b, r_b), P_b (n_pad, r_b)) of the repaired batch, per the
+    plan's R5 strategy.  ``P_b = B^T U_b`` exactly — the batch's
+    contribution to the merge panel, carrying the batch singular values
+    implicitly and formed without dividing by them (so rank-deficient
+    batches stay finite)."""
+    if plan.rank is None:
+        # Exact: per-block gram stack (sparse-native E+R grams) + eigh,
+        # truncated to the merge width r_b = min(m_b, k + oversample).
+        u_b, _ = lsvd.merge_grams_eigh(
+            lsvd.gram_stack(blocks, use_kernel=config.use_kernel))
+        r_b = min(m_b, config.truncate_rank + config.oversample)
+        u_b = u_b[:, :r_b]
+        panel_b = ranky.right_vectors_stack(
+            blocks, u_b, jnp.ones((r_b,), jnp.float32))   # B^T U_b
+    else:
+        # Randomized (k+p)-row sketch (the tall-batch regime).  The
+        # sketch path's right vectors come from the sketch statistics
+        # (G^T vproj), so V_b diag(s_b) is finite by construction.
+        u_b, s_b, v_b = randomized.randomized_svd_blocks(
+            blocks, rank=plan.rank, oversample=config.oversample,
+            power_iters=config.power_iters, key=k_batch, want_right=True)
+        panel_b = v_b * s_b[None, :]
+    return u_b, panel_b
+
+
+def ingest(
+    state: StreamingSVDState,
+    delta,
+    config,
+    plan,
+) -> Tuple[StreamingSVDState, IngestInfo]:
+    """Fold one batch of new rows into the state (see module docstring).
+
+    ``config`` is an ``api.SolveConfig`` with ``truncate_rank`` set;
+    ``plan`` is the R5 plan from ``planner.make_stream_plan`` (its
+    ``rank`` field is the batch-factorization decision: ``None`` =
+    exact gram stack, ``r`` = randomized sketch of rank r).
+    Returns ``(new_state, IngestInfo)``.
+    """
+    a_norm = stream_state.as_delta(delta, state)
+    m_b, _ = stream_state.delta_shape(delta)
+    d = state.num_blocks
+
+    # The PRNG chain: batch b always draws fold_in(root, b), so a
+    # restored-from-checkpoint stream re-draws the same repair columns
+    # and sketch matrices as the uninterrupted one (bit-identical).
+    k_batch = jax.random.fold_in(state.key, state.batches_seen)
+
+    # Repair BEFORE factorization/truncation (the rank problem).
+    blocks = ranky.split_and_repair(a_norm, d, config.method, k_batch)
+    lonely_pb = ranky.lonely_rows_per_block(a_norm, d)
+    lonely_total = sum(lonely_pb)
+    repaired = _repaired_count(blocks, lonely_total)
+
+    u_b, panel_b = _factor_batch(blocks, m_b, config, plan, k_batch)
+
+    # Merge-and-truncate: one hierarchy-style panel SVD of
+    # [V diag(decay*s) | B^T U_b], nothing bigger than (n_pad, k + r_b).
+    s_old = state.s * jnp.float32(config.history_decay)
+    p = jnp.concatenate([state.v * s_old[None, :], panel_b], axis=1)
+    k_old = state.rank
+    k_new = min(config.truncate_rank, p.shape[1])
+    v_new, s_new, uk = hierarchy.merge_svd(p, k_new)  # uk: (k_old+r_b, k_new)
+    u_new = jnp.concatenate(
+        [state.u @ uk[:k_old], u_b @ uk[k_old:]], axis=0)
+
+    new_state = StreamingSVDState(
+        u=u_new, s=s_new, v=v_new, key=state.key,
+        n=state.n, num_blocks=d,
+        rows_seen=state.rows_seen + m_b,
+        batches_seen=state.batches_seen + 1,
+        lonely_rows_seen=state.lonely_rows_seen + lonely_total,
+        repaired_rows_seen=state.repaired_rows_seen + repaired)
+    info = IngestInfo(
+        batch_rows=m_b, lonely_rows_per_block=lonely_pb,
+        lonely_rows=lonely_total, repaired_rows=repaired)
+    return new_state, info

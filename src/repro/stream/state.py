@@ -1,0 +1,180 @@
+"""The checkpointable state of a long-lived streaming Ranky SVD.
+
+A streaming solve never sees the whole matrix: rows arrive in batches
+(a day of user-item interactions, a window of network logs) and the
+service must keep serving an up-to-date truncated factorization of
+everything ingested so far.  :class:`StreamingSVDState` is the entire
+durable state of such a service:
+
+* ``u`` (rows_seen, k) / ``s`` (k,) / ``v`` (n_pad, k) — the truncated
+  factorization of every row ingested so far (after ``history_decay``
+  weighting).  ``v`` is load-bearing for ingestion, not an optional
+  extra: ``diag(s) @ v.T`` is the rank-k proxy of the whole history
+  that the next merge-and-truncate folds the next batch into (Iwen &
+  Ong's hierarchical merge, re-used as an *incremental* update).  ``u``
+  rows are in ingestion order, so it grows with ``rows_seen`` — the
+  merge itself never touches anything bigger than
+  O(batch + (k+p) * N) (planner rule R5).
+* the *column universe*: ``n`` global columns split into ``num_blocks``
+  column blocks of width ``ceil(n / num_blocks)`` — the same ONE
+  block-splitting convention as every other path (core/sparse.py).
+  Every delta must live in this universe; ``v`` rows are in padded
+  column order (n_pad = num_blocks * width).
+* the Ranky repair side-band, accumulated: ``lonely_rows_seen`` /
+  ``repaired_rows_seen`` count the lonely rows each batch exposed and
+  the repairs the checkers made before each merge (the rank problem is
+  MORE load-bearing here than in one-shot solves — a deficient batch
+  truncated before repair loses components every later merge inherits).
+* the PRNG key chain: ``key`` is the root; ingest ``b`` draws
+  ``fold_in(key, b)`` so a replayed/restored stream re-draws the exact
+  repair columns and sketch matrices (checkpoint resume is
+  bit-identical by construction).
+
+The state is a frozen, registered JAX pytree — it flows through
+``jax.tree`` utilities and, via the pytree-dataclass support in
+``checkpoint/ckpt.py``, through ``Checkpointer.save`` / ``restore``
+unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ranky, sparse
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class StreamingSVDState:
+    """Everything a streaming SVD service needs to survive a restart.
+
+    Children (arrays): ``u``, ``s``, ``v``, ``key``.  Aux (static):
+    the column universe (``n``, ``num_blocks``) and the ingestion
+    counters.  ``rank`` is ``s.shape[0]`` — it grows batch by batch
+    until it reaches the configured ``truncate_rank`` and stays there.
+    """
+
+    u: jnp.ndarray      # (rows_seen, k) left vectors, ingestion order
+    s: jnp.ndarray      # (k,) singular values (history-decayed)
+    v: jnp.ndarray      # (n_pad, k) right vectors, padded column order
+    key: jax.Array      # PRNG chain root; batch b uses fold_in(key, b)
+    n: int              # column universe (unpadded)
+    num_blocks: int     # column-block count D of the universe
+    rows_seen: int      # total rows ingested
+    batches_seen: int   # total svd_update calls folded in
+    lonely_rows_seen: int    # cumulative lonely rows across batches
+    repaired_rows_seen: int  # cumulative Ranky side-band repairs
+
+    def tree_flatten(self):
+        return ((self.u, self.s, self.v, self.key),
+                (self.n, self.num_blocks, self.rows_seen,
+                 self.batches_seen, self.lonely_rows_seen,
+                 self.repaired_rows_seen))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def rank(self) -> int:
+        """Current truncation rank k (0 for a freshly initialized state)."""
+        return int(self.s.shape[0])
+
+    @property
+    def width(self) -> int:
+        """Column-block width W = ceil(n / num_blocks)."""
+        return sparse.block_width(self.n, self.num_blocks)
+
+    @property
+    def n_pad(self) -> int:
+        """Padded column count D*W that ``v`` rows are indexed by."""
+        return self.num_blocks * self.width
+
+    def trimmed_v(self) -> jnp.ndarray:
+        """``v`` with the padding columns trimmed back off — rows in
+        ORIGINAL column order, the front-door convention."""
+        return self.v[:self.n]
+
+
+def init_state(
+    n: int,
+    *,
+    num_blocks: int,
+    key: Optional[jax.Array] = None,
+) -> StreamingSVDState:
+    """A rank-0 state over an ``n``-column universe split ``num_blocks``
+    ways.  The first ingest grows it to the batch's rank; no
+    special-casing anywhere (empty panels concatenate away)."""
+    if n < 1:
+        raise ValueError(f"init_state needs n >= 1 columns, got {n}")
+    if num_blocks < 1:
+        raise ValueError(f"init_state needs num_blocks >= 1, got {num_blocks}")
+    if key is None:
+        key = ranky.default_key()
+    w = sparse.block_width(n, num_blocks)
+    return StreamingSVDState(
+        u=jnp.zeros((0, 0), jnp.float32),
+        s=jnp.zeros((0,), jnp.float32),
+        v=jnp.zeros((num_blocks * w, 0), jnp.float32),
+        key=key,
+        n=n, num_blocks=num_blocks,
+        rows_seen=0, batches_seen=0,
+        lonely_rows_seen=0, repaired_rows_seen=0)
+
+
+# ---------------------------------------------------------------------------
+# Delta normalization: one adapter for the three accepted representations
+# ---------------------------------------------------------------------------
+
+Delta = Union[np.ndarray, jnp.ndarray, "sparse.COOMatrix", "sparse.BlockEll"]
+
+
+def delta_shape(delta: Delta) -> Tuple[int, int]:
+    """(batch rows, columns) of any accepted delta representation."""
+    if isinstance(delta, sparse.BlockEll):
+        return delta.m, delta.n
+    if isinstance(delta, sparse.COOMatrix):
+        return delta.shape
+    arr = np.asarray(delta)
+    if arr.ndim != 2:
+        raise ValueError(f"dense delta must be 2-D, got shape {arr.shape}")
+    return arr.shape[0], arr.shape[1]
+
+
+def as_delta(delta: Delta, state: StreamingSVDState):
+    """Normalize a batch of new rows into the state's column universe.
+
+    * dense (m_b, n) rows — zero-padded to the universe's block multiple
+      (lossless) and handed to the dense engine path;
+    * ``COOMatrix`` — converted to a ``BlockEll`` over the universe's
+      ``num_blocks`` (sparse-native; the batch is never densified);
+    * ``BlockEll`` — passed through (its universe must match).
+
+    Every representation must already be indexed by the state's column
+    universe: ``delta`` columns == ``state.n``.
+    """
+    m_b, n_d = delta_shape(delta)
+    if m_b < 1:
+        raise ValueError(f"delta has {m_b} rows; an ingest needs >= 1")
+    if n_d != state.n:
+        raise ValueError(
+            f"delta has {n_d} columns but the streaming state's column "
+            f"universe is n={state.n}; deltas must be indexed by the "
+            f"universe (pad new-column data into it up front)")
+    if isinstance(delta, sparse.BlockEll):
+        if delta.num_blocks != state.num_blocks:
+            raise ValueError(
+                f"BlockEll delta has {delta.num_blocks} blocks but the "
+                f"state's universe has num_blocks={state.num_blocks}")
+        return delta
+    if isinstance(delta, sparse.COOMatrix):
+        return sparse.block_ell_from_coo(delta, state.num_blocks)
+    arr = np.asarray(delta)
+    return jnp.asarray(
+        sparse.pad_to_block_multiple(arr, state.num_blocks).astype(
+            np.float32))
