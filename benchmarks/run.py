@@ -3,15 +3,16 @@ comparisons + LM micro-benches.  Prints ``name,us_per_call,derived`` CSV
 and optionally machine-readable JSON.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--skip-lm] \
-      [--only SECTION] [--json OUT.json]
+      [--skip SECTION ...] [--only SECTION] [--json OUT.json]
 
-Sections: paper, rank_problem, merge, sparse, randomized, streaming, lm.
-``--only SECTION`` runs just that section and ``--json OUT.json``
-additionally writes one record per row with the fields CI consumes:
-``section``, ``name``, ``shape`` ("MxN" parsed from the name, null when
-the row has no shape), ``us_per_call``, ``rel_err`` (the row's relative
-error / e_sigma when it reports one, else null) and the raw ``derived``
-string.  The CI smoke leg runs ``--only randomized --json out.json``.
+Sections: paper, rank_problem, merge, sparse, randomized, streaming,
+streaming_dist, lm.  ``--only SECTION`` runs just that section and
+``--json OUT.json`` additionally writes one record per row with the
+fields CI consumes: ``section``, ``name``, ``shape`` ("MxN" parsed from
+the name, null when the row has no shape), ``us_per_call``, ``rel_err``
+(the row's relative error / e_sigma when it reports one, else null) and
+the raw ``derived`` string.  Every CI benchmark leg gates its JSON with
+``scripts/check_bench_json.py`` and uploads it as an artifact.
 """
 from __future__ import annotations
 
@@ -20,7 +21,7 @@ import re
 import sys
 
 SECTIONS = ("paper", "rank_problem", "merge", "sparse", "randomized",
-            "streaming", "lm")
+            "streaming", "streaming_dist", "lm")
 
 _SHAPE_RE = re.compile(r"(\d+)x(\d+)")
 _ERR_RE = re.compile(
@@ -96,6 +97,15 @@ def _run_streaming(rows, full: bool) -> None:
         rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
 
 
+def _run_streaming_dist(rows, full: bool) -> None:
+    from benchmarks import streaming_dist
+    print("# distributed streaming ingest (shard_map svd_update, rule R5d)",
+          flush=True)
+    for r in streaming_dist.run(**({"batch_sizes": (32, 128, 512, 2048)}
+                                   if full else {})):
+        rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
+
+
 def _run_lm(rows, full: bool) -> None:
     from benchmarks import lm_step
     print("# lm steps (reduced configs)", flush=True)
@@ -111,6 +121,7 @@ _RUNNERS = {
     "sparse": _run_sparse,
     "randomized": _run_randomized,
     "streaming": _run_streaming,
+    "streaming_dist": _run_streaming_dist,
     "lm": _run_lm,
 }
 
@@ -118,7 +129,15 @@ _RUNNERS = {
 def main() -> None:
     argv = sys.argv[1:]
     full = "--full" in argv
-    skip_lm = "--skip-lm" in argv
+    skip = {"lm"} if "--skip-lm" in argv else set()
+    # --skip SECTION may repeat: the CI smoke leg skips the sections
+    # that already run as dedicated matrix legs.
+    for i, a in enumerate(argv):
+        if a == "--skip":
+            if i + 1 >= len(argv) or argv[i + 1] not in SECTIONS:
+                raise SystemExit(
+                    f"--skip needs a section; want one of {SECTIONS}")
+            skip.add(argv[i + 1])
     only = None
     if "--only" in argv:
         idx = argv.index("--only") + 1
@@ -133,8 +152,7 @@ def main() -> None:
             raise SystemExit("--json needs an output path")
         json_path = argv[idx]
 
-    sections = [only] if only else [
-        s for s in SECTIONS if not (s == "lm" and skip_lm)]
+    sections = [only] if only else [s for s in SECTIONS if s not in skip]
     records = []
     for section in sections:
         rows = []

@@ -60,8 +60,12 @@ def run(batch_sizes=(32, 128, 512), num_batches=6, cols=2048, blocks=8,
     for mb in batch_sizes:
         m_total = mb * num_batches
         coo, deltas = _batches(m_total, cols, density, num_batches, seed)
+        # Pinned to the single-host engine: this benchmark is the R5
+        # flat-peak proof; the shard_map engine has its own A/B with the
+        # R5d per-device form in benchmarks/streaming_dist.py.
         cfg = SolveConfig(method="none", truncate_rank=rank + OVERSAMPLE,
-                          oversample=OVERSAMPLE, num_blocks=blocks)
+                          oversample=OVERSAMPLE, num_blocks=blocks,
+                          stream_backend="single")
         shape = f"{mb}x{cols}"
 
         state = svd_init(cols, cfg)

@@ -1,0 +1,145 @@
+"""Distributed streaming ingest: the shard_map ``svd_update`` engine
+(planner rule R5d) A/B'd against the single-host merge, with the
+PER-DEVICE peak pinned to the hand-computed closed form.
+
+The sharded engine keeps the state's ``v`` column-block-sharded (one
+block per device), factors each delta with psum'd per-device partials
+and applies the small merge rotation locally — no device ever
+materializes the (N_pad, k + l_b) panel.  This benchmark streams
+``num_batches`` COO batches per batch size and reports:
+
+* per-batch ingest latency for BOTH engines (mean over the stream,
+  first batch excluded — it pays the XLA compile);
+* ``rel_err`` of the sharded stream's top-k singular values vs a
+  from-scratch ``svd()`` oracle on the concatenation;
+* the R5d PER-DEVICE peak-byte estimate at the FIRST and LAST batch —
+  flat by construction, and pinned against the closed form written out
+  by hand here (exact batch path):
+
+      4 * m_b^2  +  4 * 2 * W * (k + l_b)      [float32 bytes]
+
+  one local (m_b, m_b) gram + psum buffer, plus the per-device
+  (W, k + l_b) merge slice and its output shard.
+
+Run via ``python -m benchmarks.run --only streaming_dist`` (the CI leg
+forces 8 host devices so the sharded engine actually engages; without
+one device per block the R5d plan degrades honestly to single-host and
+the rows record which engine ran).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# One block per device: the flag must land BEFORE jax initializes.  When
+# jax is already up (a full benchmarks.run pass imported it for an
+# earlier section) it is inert and the plan degrades honestly.
+if "jax" not in sys.modules and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core import planner, sparse
+from repro.core.api import SolveConfig, svd, svd_init, svd_update
+
+RANK = 16
+# Same retained-buffer protocol as benchmarks/streaming.py: the state
+# retains truncate_rank = RANK + OVERSAMPLE directions, the service
+# serves the top-RANK off it.
+OVERSAMPLE = 64
+BLOCKS = 8
+
+
+def _batches(m_total, n, density, num_batches, seed):
+    coo = sparse.ensure_full_row_rank(
+        sparse.random_bipartite(m_total, n, density, seed=seed,
+                                weighted=True), seed=seed)
+    mb = m_total // num_batches
+    out = []
+    for i in range(num_batches):
+        lo, hi = i * mb, (i + 1) * mb
+        sel = (coo.rows >= lo) & (coo.rows < hi)
+        out.append(sparse.COOMatrix(
+            rows=(coo.rows[sel] - lo).astype(np.int32),
+            cols=coo.cols[sel], vals=coo.vals[sel], shape=(mb, n)))
+    return coo, out
+
+
+def _stream(deltas, cols, cfg):
+    state = svd_init(cols, cfg)
+    times, peaks, backend = [], [], None
+    for delta in deltas:
+        t0 = time.perf_counter()
+        res = svd_update(state, delta, cfg)
+        times.append(time.perf_counter() - t0)
+        peaks.append(res.plan.estimated_peak_bytes)
+        backend = res.plan.backend
+        state = res.state
+    return state, float(np.mean(times[1:])), peaks, backend
+
+
+def run(batch_sizes=(32, 128, 512), num_batches=6, cols=2048, blocks=BLOCKS,
+        density=2e-3, rank=RANK, seed=2020, verbose=True):
+    out = []
+    k = rank + OVERSAMPLE
+    w = -(-cols // blocks)
+    for mb in batch_sizes:
+        m_total = mb * num_batches
+        coo, deltas = _batches(m_total, cols, density, num_batches, seed)
+        base = dict(method="none", truncate_rank=k, oversample=OVERSAMPLE,
+                    num_blocks=blocks)
+        shape = f"{mb}x{cols}"
+
+        st_d, t_shard, peaks, backend = _stream(
+            deltas, cols, SolveConfig(stream_backend="shard_map", **base))
+        _, t_single, _, _ = _stream(
+            deltas, cols, SolveConfig(stream_backend="single", **base))
+
+        # R5d per-device peak, written out by hand (exact batch path):
+        # one (m_b, m_b) local gram + psum buffer, plus the (W, k + l_b)
+        # merge slice and its output shard.  Flat across the stream.
+        l_b = min(k + OVERSAMPLE, mb)
+        expected_pd = 4 * mb * mb + 4 * 2 * w * (k + l_b)
+        assert peaks[0] == peaks[-1], \
+            "R5d per-device peak must not grow with rows seen"
+        if backend == "shard_map":
+            assert peaks[0] == expected_pd, (peaks[0], expected_pd)
+
+        oracle = svd(coo, SolveConfig(method="none", num_blocks=blocks,
+                                      backend="single", merge_mode="gram"))
+        jax.block_until_ready(oracle.s)
+        s_true = np.asarray(oracle.s)[:rank]
+        rel = float(np.abs(np.asarray(st_d.s)[:rank] - s_true).max()
+                    / s_true[0])
+
+        derived = (f"rel_err={rel:.2e};backend={backend}"
+                   f";r5d_peak_per_device_first_b={peaks[0]}"
+                   f";r5d_peak_per_device_last_b={peaks[-1]}"
+                   f";r5d_expected_b={expected_pd}"
+                   f";devices={jax.device_count()}"
+                   f";rows_seen={st_d.rows_seen}")
+        out.append({"name": f"dist_stream_ingest_{shape}",
+                    "seconds": t_shard, "derived": derived})
+        out.append({"name": f"single_stream_ingest_{shape}",
+                    "seconds": t_single, "derived": ""})
+        if verbose:
+            print(f"  batch {mb:4d} rows x{num_batches} "
+                  f"[{backend}/{jax.device_count()}dev]: sharded "
+                  f"{t_shard * 1e3:7.2f}ms/batch | single "
+                  f"{t_single * 1e3:7.2f}ms/batch | rel_err={rel:.2e} | "
+                  f"R5d per-device peak {peaks[0]} B (flat)", flush=True)
+    return out
+
+
+def main(full: bool = False):
+    kw = {"batch_sizes": (32, 128, 512, 2048)} if full else {}
+    return run(**kw)
+
+
+if __name__ == "__main__":
+    main(full="--full" in sys.argv)

@@ -1,0 +1,111 @@
+#!/usr/bin/env python
+"""The one JSON sanity gate behind every benchmark CI leg.
+
+    python scripts/check_bench_json.py OUT.json [--section NAME]
+        [--min-records N]
+
+Replaces the per-leg inline heredocs that used to live in
+.github/workflows/ci.yml: every leg runs ``benchmarks.run ... --json
+OUT.json`` and then this script, which asserts
+
+* the file parses and holds at least ``--min-records`` records (default
+  1) with the schema ``benchmarks/run.py`` documents;
+* with ``--section NAME``: every record belongs to that section;
+  without it (the full smoke): records may span sections;
+* at least one record reports a ``rel_err`` (a benchmark run that lost
+  its accuracy column is a broken benchmark, not a fast one);
+* per-section invariants for the sections that carry them:
+  - ``streaming``       — every ``stream_ingest_*`` row records the R5
+    peak at the first AND last batch (the flat-memory proof);
+  - ``streaming_dist``  — every ``dist_stream_ingest_*`` row records
+    the R5d PER-DEVICE peak at first/last batch plus the hand-computed
+    expectation, first == last (flat), and first == expected whenever
+    the shard_map engine actually ran.
+
+Exit code 0 on success; an AssertionError (non-zero exit) otherwise —
+CI-friendly either way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+REQUIRED_FIELDS = ("section", "name", "us_per_call", "rel_err", "derived")
+
+
+def _derived_int(derived: str, key: str) -> int:
+    m = re.search(rf"{re.escape(key)}=(\d+)", derived)
+    assert m, f"derived string lacks {key}=: {derived!r}"
+    return int(m.group(1))
+
+
+def check_streaming(recs) -> None:
+    ingest = [r for r in recs if r["name"].startswith("stream_ingest")]
+    assert ingest, "streaming section has no stream_ingest_* rows"
+    for r in ingest:
+        first = _derived_int(r["derived"], "r5_peak_first_b")
+        last = _derived_int(r["derived"], "r5_peak_last_b")
+        assert first == last, \
+            f"{r['name']}: R5 peak grew {first} -> {last} (must be flat)"
+
+
+def check_streaming_dist(recs) -> None:
+    ingest = [r for r in recs if r["name"].startswith("dist_stream_ingest")]
+    assert ingest, "streaming_dist section has no dist_stream_ingest_* rows"
+    for r in ingest:
+        first = _derived_int(r["derived"], "r5d_peak_per_device_first_b")
+        last = _derived_int(r["derived"], "r5d_peak_per_device_last_b")
+        expected = _derived_int(r["derived"], "r5d_expected_b")
+        assert first == last, \
+            f"{r['name']}: R5d per-device peak grew {first} -> {last}"
+        if "backend=shard_map" in r["derived"]:
+            assert first == expected, \
+                (f"{r['name']}: per-device peak {first} != hand-computed "
+                 f"R5d estimate {expected}")
+
+
+SECTION_CHECKS = {
+    "streaming": check_streaming,
+    "streaming_dist": check_streaming_dist,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("json_path")
+    ap.add_argument("--section", default=None,
+                    help="require every record to belong to this section")
+    ap.add_argument("--min-records", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    with open(args.json_path) as f:
+        recs = json.load(f)
+    assert isinstance(recs, list) and len(recs) >= args.min_records, \
+        f"{args.json_path}: want >= {args.min_records} records, " \
+        f"got {len(recs) if isinstance(recs, list) else type(recs)}"
+    for r in recs:
+        missing = [k for k in REQUIRED_FIELDS if k not in r]
+        assert not missing, f"record {r.get('name')!r} lacks {missing}"
+    if args.section is not None:
+        bad = sorted({r["section"] for r in recs} - {args.section})
+        assert not bad, \
+            f"{args.json_path}: expected only section {args.section!r}, " \
+            f"also found {bad}"
+    assert any(r["rel_err"] is not None for r in recs), \
+        f"{args.json_path}: no record reports a rel_err"
+
+    sections = sorted({r["section"] for r in recs})
+    for section in sections:
+        check = SECTION_CHECKS.get(section)
+        if check is not None:
+            check([r for r in recs if r["section"] == section])
+
+    print(f"{args.json_path} OK ({len(recs)} records, "
+          f"sections: {', '.join(sections)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -131,11 +131,22 @@ def _rebuild(node):
         aux = tuple(json.loads(str(node[_AUX_KEY])))
         n_children = len(node) - 2
         children = tuple(_rebuild(node[f"c{i}"]) for i in range(n_children))
-        return cls.tree_unflatten(aux, children)
+        obj = cls.tree_unflatten(aux, children)
+        # Device-count-aware re-placement: a rebuilt dataclass may opt
+        # into resharding itself for the CURRENT device environment
+        # (e.g. StreamingSVDState re-shards its v when one device per
+        # column block is available) — checkpoints are saved gathered,
+        # so this is placement only, never values.
+        hook = getattr(obj, "reshard_for_restore", None)
+        return hook() if callable(hook) else obj
     return {k: _rebuild(v) for k, v in node.items()}
 
 
 def _encode_leaf(v) -> np.ndarray:
+    # np.asarray GATHERS: a device-sharded jax.Array (e.g. a streaming
+    # state's column-block-sharded v) lands in one host buffer, so the
+    # on-disk layout never bakes in a device mesh — a state saved on 8
+    # devices restores on 1 and vice versa (reshard_for_restore below).
     return np.asarray(_NONE_SENTINEL) if v is None else np.asarray(v)
 
 

@@ -57,6 +57,7 @@ from repro.core.planner import ASpec, Plan, PlanError  # noqa: F401  (re-export)
 from repro.core.ranky import default_key  # noqa: F401  (re-export)
 
 BACKENDS = ("single", "hierarchical", "shard_map", "auto")
+STREAM_BACKENDS = ("single", "shard_map", "auto")
 LOCAL_MODES = ("gram", "svd")
 MERGE_MODES = ("proxy", "gram")
 
@@ -115,6 +116,12 @@ class SolveConfig:
     * ``history_decay`` — streaming only: multiply the retained
       singular values by this factor before every merge (1.0 = plain
       concatenation semantics; < 1 forgets old rows exponentially).
+    * ``stream_backend`` — streaming only: ``"single"`` (one-host
+      merge-and-truncate), ``"shard_map"`` (the state's ``v`` and the
+      merge panel sharded one column block per device — planner rule
+      R5d; degrades honestly to single-host when the device count does
+      not match ``num_blocks``) or ``"auto"`` (shard_map exactly when
+      one device per column block is available).
     * ``memory_budget_bytes`` — planner budget (default 4 GiB).
     * ``key`` — PRNG key; ``None`` means ``default_key()``.
     """
@@ -135,6 +142,7 @@ class SolveConfig:
     two_level: bool = False
     truncate_rank: Optional[int] = None
     history_decay: float = 1.0
+    stream_backend: str = "auto"
     memory_budget_bytes: Optional[int] = None
     key: Optional[jax.Array] = None
 
@@ -177,6 +185,10 @@ class SolveConfig:
             raise ValueError(
                 f"invalid SolveConfig: history_decay={self.history_decay} "
                 f"must be in (0, 1] (1.0 = no forgetting)")
+        if self.stream_backend not in STREAM_BACKENDS:
+            raise ValueError(
+                f"invalid SolveConfig: stream_backend="
+                f"{self.stream_backend!r} must be one of {STREAM_BACKENDS}")
         if (self.memory_budget_bytes is not None
                 and self.memory_budget_bytes < 1):
             raise ValueError(
@@ -235,6 +247,12 @@ class SolveConfig:
                        "history decay only applies to the streaming "
                        "merge (svd_update / svd_stream); set "
                        "truncate_rank=k to stream")
+        if self.stream_backend != "auto" and self.truncate_rank is None:
+            raise _bad("stream_backend", self.stream_backend,
+                       "truncate_rank", None,
+                       "stream_backend picks the svd_update / svd_stream "
+                       "engine; set truncate_rank=k to stream (one-shot "
+                       "solves pick their backend with backend=)")
 
     def resolved_key(self) -> jax.Array:
         """The PRNG key this solve runs with (``default_key()`` if
@@ -468,6 +486,8 @@ def _coerce_config(config: Optional[SolveConfig],
 def _reject_stream_knobs(config: SolveConfig, fn: str) -> SolveConfig:
     """One-shot entry points never consult the streaming knobs — raising
     beats silently returning an untruncated result."""
+    # stream_backend needs no check of its own: __post_init__ couples a
+    # non-"auto" stream_backend to truncate_rank, which is caught here.
     if config.truncate_rank is not None:
         raise ValueError(
             f"truncate_rank={config.truncate_rank} is a streaming knob "
@@ -588,10 +608,10 @@ def _require_stream_config(config: SolveConfig) -> SolveConfig:
             "stream would grow without bound)")
     if config.backend not in ("auto", "single"):
         raise ValueError(
-            f"invalid streaming config: backend={config.backend!r} — the "
-            f"incremental merge-and-truncate runs single-host "
-            f"(backend='single' or 'auto'); distributed ingestion is a "
-            f"ROADMAP item")
+            f"invalid streaming config: backend={config.backend!r} — "
+            f"backend= picks the ONE-SHOT engine; streaming picks its "
+            f"engine with stream_backend= ('single', 'shard_map' or "
+            f"'auto'), so leave backend at 'auto'/'single'")
     if config.sketch:
         raise ValueError(
             "invalid streaming config: sketch=True belongs to the "
@@ -650,16 +670,18 @@ def svd_init(n: int, config: Optional[SolveConfig] = None,
 def plan_update(batch: Union[MatrixInput, ASpec],
                 config: Optional[SolveConfig] = None, *,
                 state=None, **overrides) -> Plan:
-    """What would :func:`svd_update` do for this batch, and why (rule
-    R5).  ``batch`` may be an :class:`~repro.core.planner.ASpec` — so
-    "can I fold a 1M-row day of data into this model on one device" is
-    answerable with no data, only shapes — or an actual delta, in which
-    case ``state`` supplies the column universe."""
+    """What would :func:`svd_update` do for this batch, and why (rules
+    R5/R5d).  ``batch`` may be an :class:`~repro.core.planner.ASpec` —
+    so "can I fold a 1M-row day of data into this model on one device"
+    is answerable with no data, only shapes — or an actual delta, in
+    which case ``state`` supplies the column universe.  The device
+    count feeds rule R5d's backend choice (``stream_backend``)."""
     from repro import stream as streaming
 
     config = _require_stream_config(_coerce_config(config, overrides))
     if isinstance(batch, ASpec):
-        return planner.make_stream_plan(batch, config)
+        return planner.make_stream_plan(batch, config,
+                                        device_count=jax.device_count())
     if state is None:
         raise ValueError(
             "plan_update needs state= (for the column universe) when "
@@ -668,7 +690,8 @@ def plan_update(batch: Union[MatrixInput, ASpec],
     m_b, _ = streaming.delta_shape(batch)
     spec = ASpec(m=m_b, n=state.n, nnz=_delta_nnz_estimate(batch),
                  num_blocks=state.num_blocks, kind="stream")
-    p = planner.make_stream_plan(spec, config)
+    p = planner.make_stream_plan(spec, config,
+                                 device_count=jax.device_count())
     # R5's closed form covers the merge working set; with a real state
     # in hand the (linear-in-rows-seen) left-factor update is concrete,
     # so say it out loud.

@@ -41,6 +41,18 @@ tests/test_api.py against hand-computed values):
   touches ``~2 * 4 * rows_seen * k`` further bytes, linear (never
   quadratic) in rows seen — ``api.plan_update`` reports that term when
   given a real state.
+* ``streaming_bytes_per_device`` — rule R5d, the shard_map streaming
+  variant: the state's ``v`` lives column-block-sharded (one block per
+  device), the batch factorization reduces to per-device partials plus
+  psums, and the merge works on the per-device (W, k + l_b) panel
+  slice whose small ``(k + l_b)``-sized rotation comes from one psum'd
+  Gram.  Per-device peak = batch term (``4 * m^2`` exact — one local
+  gram + the psum buffer, same count as ``shard_map_bytes`` — or
+  ``4 * (L*W + 2*m*L)`` sketch, the R3 per-device sketch without the D
+  factor) + ``stream_merge_bytes_per_device`` = ``4 * 2 * W *
+  (k + l_b)`` for the per-device panel slice and its output shard.  No
+  device ever materializes the (N_pad, k + l_b) panel, and the form
+  keeps R5's guarantee: independent of the rows already ingested.
 
 Auto rules (``config.backend == "auto"``), first match wins:
 
@@ -152,6 +164,36 @@ def stream_merge_bytes(batch: ASpec, rank: int, oversample: int, *,
            if batch_rank is None else min(batch_rank, batch.m))
     n_pad = batch.num_blocks * batch.width
     return BYTES_F32 * 2 * n_pad * (rank + r_b)
+
+
+def stream_merge_bytes_per_device(batch: ASpec, rank: int, oversample: int,
+                                  *, batch_rank: Optional[int] = None) -> int:
+    """R5d merge term: the per-device (W, k + r_b) slice of the stacked
+    panel [V_d diag(s) | B_d^T U_b] plus its same-sized output shard —
+    ``stream_merge_bytes`` with N_pad replaced by the block width W."""
+    r_b = (stream_panel_width(rank, oversample, batch.m)
+           if batch_rank is None else min(batch_rank, batch.m))
+    return BYTES_F32 * 2 * batch.width * (rank + r_b)
+
+
+def streaming_bytes_per_device(batch: ASpec, rank: int, oversample: int, *,
+                               exact: bool,
+                               batch_rank: Optional[int] = None) -> int:
+    """R5d total: one sharded ``svd_update``'s PER-DEVICE peak = batch
+    factorization (exact: one local (m, m) gram + the psum buffer, the
+    same ``4 m^2`` count as ``shard_map_bytes``; sketch: the per-device
+    (L, W) block sketch + (L, m) pullback / (m, L) QR workspace — the R3
+    shard_map sketch peak, no D factor) + the per-device merge slice.
+    Independent of the rows already ingested, like R5."""
+    r_b = (stream_panel_width(rank, oversample, batch.m)
+           if batch_rank is None else min(batch_rank, batch.m))
+    if exact:
+        base = BYTES_F32 * batch.m * batch.m
+    else:
+        l = sketch_width(r_b, oversample, batch.m)
+        base = BYTES_F32 * (l * batch.width + 2 * batch.m * l)
+    return base + stream_merge_bytes_per_device(batch, rank, oversample,
+                                                batch_rank=batch_rank)
 
 
 def streaming_bytes(batch: ASpec, rank: int, oversample: int, *,
@@ -345,22 +387,31 @@ def make_plan(spec: ASpec, config, *, device_count: int = 1,
     return finish(backend, exact_strategy(), reasons)
 
 
-def make_stream_plan(batch: ASpec, config) -> Plan:
-    """Rule R5: plan one streaming ``svd_update`` from the BATCH shape.
+def make_stream_plan(batch: ASpec, config, *, device_count: int = 1) -> Plan:
+    """Rules R5/R5d: plan one streaming ``svd_update`` from the BATCH
+    shape plus the device environment.
 
     ``batch`` describes the incoming delta (``m`` = batch rows, ``n`` /
-    ``num_blocks`` = the state's column universe).  The only decision is
-    how to factor the batch before the merge — the merge itself is
-    fixed (one (N_pad, k + l_b) panel SVD) and its cost is independent
-    of the rows already ingested, which is the whole point of
-    streaming.  The returned plan's ``rank`` field carries the batch
-    factorization: ``None`` = exact per-block gram stack + eigh,
-    ``r`` = randomized rank-r sketch.  ``config.rank``, when set,
-    forces the sketch explicitly (same meaning as in one-shot solves).
+    ``num_blocks`` = the state's column universe).  Two decisions:
 
-    Like R3, R5 never raises: streaming was explicitly requested, so
-    when nothing fits the budget the planner degrades honestly to the
-    cheaper batch factorization and says so.
+    * **backend** (R5d) — ``config.stream_backend`` picks the engine.
+      ``"shard_map"`` (or ``"auto"`` when one device per column block is
+      available) shards the state's ``v`` and the merge panel over the
+      devices; peak bytes are then PER DEVICE
+      (``streaming_bytes_per_device``).  A requested shard_map that the
+      environment cannot honor (``device_count != num_blocks``) degrades
+      honestly to the single-host engine with a reason saying so —
+      streaming was explicitly requested, so R5d never raises.
+    * **batch factorization** — the returned plan's ``rank`` field:
+      ``None`` = exact per-block gram stack + eigh, ``r`` = randomized
+      rank-r sketch.  ``config.rank``, when set, forces the sketch
+      explicitly (same meaning as in one-shot solves).  The merge itself
+      is fixed and independent of the rows already ingested either way —
+      the whole point of streaming.
+
+    Like R3, R5/R5d never raise: when nothing fits the budget the
+    planner degrades honestly to the cheaper batch factorization and
+    says so.
     """
     k = config.truncate_rank
     if k is None:
@@ -369,26 +420,62 @@ def make_stream_plan(batch: ASpec, config) -> Plan:
             "streaming truncation rank); got truncate_rank=None")
     budget = config.memory_budget_bytes or DEFAULT_MEMORY_BUDGET
     l_b = stream_panel_width(k, config.oversample, batch.m)
-    merge = stream_merge_bytes(batch, k, config.oversample)
     est = {
         "stream_exact": streaming_bytes(batch, k, config.oversample,
                                         exact=True),
         "stream_sketch": streaming_bytes(batch, k, config.oversample,
                                          exact=False),
     }
-    r5 = (f"R5: streaming merge-and-truncate — per-update peak = batch "
-          f"factorization + {merge:,}B merge panel "
-          f"(2 * N_pad * (k={k} + l_b={l_b}) floats), independent of "
-          f"rows already ingested (excludes the state's left-factor "
-          f"update, ~8*rows_seen*k B, linear in rows seen)")
+
+    stream_backend = getattr(config, "stream_backend", "auto")
+    shard_ok = device_count == batch.num_blocks and device_count > 1
+    use_shard = shard_ok and stream_backend in ("auto", "shard_map")
+    degrade_reasons = []
+    if stream_backend == "shard_map" and not shard_ok:
+        why_not = (f"only {device_count} device is available"
+                   if device_count == batch.num_blocks else
+                   f"device_count={device_count} != num_blocks="
+                   f"{batch.num_blocks}")
+        degrade_reasons.append(
+            f"R5d: stream_backend='shard_map' requested but {why_not} "
+            f"(sharded ingest needs one column block per device, more "
+            f"than one device total); degrading honestly to the "
+            f"single-host merge")
+
+    if use_shard:
+        est["stream_exact_per_device"] = streaming_bytes_per_device(
+            batch, k, config.oversample, exact=True)
+        est["stream_sketch_per_device"] = streaming_bytes_per_device(
+            batch, k, config.oversample, exact=False)
+        backend, exact_key, sketch_key = ("shard_map",
+                                          "stream_exact_per_device",
+                                          "stream_sketch_per_device")
+        merge = stream_merge_bytes_per_device(batch, k, config.oversample)
+        rule = (f"R5d: sharded streaming merge-and-truncate over "
+                f"{device_count} devices (v column-block-sharded, batch "
+                f"partials psum'd, the (k + l_b)-sized rotation from one "
+                f"psum'd Gram) — PER-DEVICE peak = batch factorization + "
+                f"{merge:,}B merge slice (2 * W * (k={k} + l_b={l_b}) "
+                f"floats), independent of rows already ingested")
+    else:
+        backend, exact_key, sketch_key = ("single", "stream_exact",
+                                          "stream_sketch")
+        merge = stream_merge_bytes(batch, k, config.oversample)
+        rule = (f"R5: streaming merge-and-truncate — per-update peak = "
+                f"batch factorization + {merge:,}B merge panel "
+                f"(2 * N_pad * (k={k} + l_b={l_b}) floats), independent "
+                f"of rows already ingested (excludes the state's "
+                f"left-factor update, ~8*rows_seen*k B, linear in rows "
+                f"seen)")
+    head = [rule] + degrade_reasons
 
     def finish(rank, peak, reasons):
         return Plan(
-            backend="single", strategy="streaming", method=config.method,
+            backend=backend, strategy="streaming", method=config.method,
             merge_mode=config.merge_mode, local_mode=config.local_mode,
             rank=rank, truncate_to=None, sketch_leaves=False,
             num_blocks=batch.num_blocks, spec=batch, estimates=dict(est),
-            budget=budget, reasons=tuple(reasons), peak_bytes=peak)
+            budget=budget, reasons=tuple(head + reasons), peak_bytes=peak)
 
     if config.rank is not None:
         # The forced sketch runs at rank=config.rank, not l_b — estimate
@@ -396,29 +483,33 @@ def make_stream_plan(batch: ASpec, config) -> Plan:
         est["stream_sketch"] = streaming_bytes(
             batch, k, config.oversample, exact=False,
             batch_rank=config.rank)
-        return finish(min(config.rank, batch.m), est["stream_sketch"], [
-            r5, f"rank={config.rank} requested explicitly — randomized "
-                f"batch factorization ({est['stream_sketch']:,}B)"])
-    if est["stream_exact"] <= budget and batch.m <= EXACT_TRUNC_MAX_M:
-        return finish(None, est["stream_exact"], [
-            r5, f"exact batch factorization — {est['stream_exact']:,}B "
-                f"fits the budget ({budget:,}B) and batch rows "
-                f"{batch.m} <= {EXACT_TRUNC_MAX_M} (more accurate than "
-                f"the sketch)"])
+        if use_shard:
+            est["stream_sketch_per_device"] = streaming_bytes_per_device(
+                batch, k, config.oversample, exact=False,
+                batch_rank=config.rank)
+        return finish(min(config.rank, batch.m), est[sketch_key], [
+            f"rank={config.rank} requested explicitly — randomized "
+            f"batch factorization ({est[sketch_key]:,}B)"])
+    if est[exact_key] <= budget and batch.m <= EXACT_TRUNC_MAX_M:
+        return finish(None, est[exact_key], [
+            f"exact batch factorization — {est[exact_key]:,}B "
+            f"fits the budget ({budget:,}B) and batch rows "
+            f"{batch.m} <= {EXACT_TRUNC_MAX_M} (more accurate than "
+            f"the sketch)"])
     why = (f"exceeds the budget ({budget:,}B)"
-           if est["stream_exact"] > budget
+           if est[exact_key] > budget
            else f"batch rows {batch.m} > exact ceiling {EXACT_TRUNC_MAX_M}")
-    if est["stream_sketch"] <= budget:
-        return finish(l_b, est["stream_sketch"], [
-            r5, f"the exact batch gram stack needs "
-                f"{est['stream_exact']:,}B which {why}; the "
-                f"(k+p)-row batch sketch fits at "
-                f"{est['stream_sketch']:,}B"])
-    cheaper_exact = est["stream_exact"] <= est["stream_sketch"]
+    if est[sketch_key] <= budget:
+        return finish(l_b, est[sketch_key], [
+            f"the exact batch gram stack needs "
+            f"{est[exact_key]:,}B which {why}; the "
+            f"(k+p)-row batch sketch fits at "
+            f"{est[sketch_key]:,}B"])
+    cheaper_exact = est[exact_key] <= est[sketch_key]
     rank = None if cheaper_exact else l_b
-    peak = est["stream_exact"] if cheaper_exact else est["stream_sketch"]
+    peak = est[exact_key] if cheaper_exact else est[sketch_key]
     return finish(rank, peak, [
-        r5, f"NO batch factorization fits the budget ({budget:,}B): "
-            f"exact {est['stream_exact']:,}B, sketch "
-            f"{est['stream_sketch']:,}B; proceeding with the cheaper "
-            f"{'exact gram stack' if cheaper_exact else 'sketch'}"])
+        f"NO batch factorization fits the budget ({budget:,}B): "
+        f"exact {est[exact_key]:,}B, sketch "
+        f"{est[sketch_key]:,}B; proceeding with the cheaper "
+        f"{'exact gram stack' if cheaper_exact else 'sketch'}"])

@@ -8,15 +8,24 @@ via Ranky-repaired, sparse-native batch factorization and a
 hierarchy-style panel merge.  The public front door lives at
 ``repro.core.api.svd_update`` / ``svd_stream`` / ``svd_init``.
 """
-from repro.stream.ingest import IngestInfo, ingest  # noqa: F401
+from repro.stream.ingest import (  # noqa: F401
+    IngestInfo,
+    ingest,
+    ingest_shard_map,
+)
 from repro.stream.state import (  # noqa: F401
+    STREAM_AXIS,
     StreamingSVDState,
     as_delta,
     delta_shape,
+    gather_state,
     init_state,
+    shard_state,
+    stream_mesh,
 )
 
 __all__ = [
-    "StreamingSVDState", "init_state", "ingest", "IngestInfo",
-    "as_delta", "delta_shape",
+    "StreamingSVDState", "init_state", "ingest", "ingest_shard_map",
+    "IngestInfo", "as_delta", "delta_shape", "shard_state",
+    "gather_state", "stream_mesh", "STREAM_AXIS",
 ]

@@ -32,21 +32,50 @@ already seen:
 Nothing in steps 3–4 depends on ``rows_seen``: the merge works on an
 (n_pad, k + r_b) panel and the batch factorization on the batch alone —
 planner rule R5's closed form, ``O(batch + (k+p) * N)`` peak.
+
+**Distributed ingestion** (``plan.backend == "shard_map"``, rule R5d):
+the same four steps run inside one ``shard_map`` region over a
+one-block-per-device mesh, and no device ever materializes anything
+N-sized:
+
+* the state's ``v`` is row-sharded (device d owns its column block's
+  (W, k) slice), deltas shard like every other path (dense columns /
+  BlockEll leading block axis);
+* repair replays the single-host prologue bit-identically: device d
+  uses ``jax.random.split(k_batch, D)[d]`` — the exact key
+  ``split_and_repair`` hands block d — and the neighbor methods' global
+  row adjacency is the psum of binarized local grams (the same matrix
+  ``row_adjacency`` computes on one host);
+* the exact batch factorization psums the per-device (m_b, m_b) grams
+  into one eigh; the randomized one runs ``randomized_tail_over`` —
+  identical Omega and the same (L, m_b) psum'd pullbacks as the
+  distributed one-shot driver;
+* the merge never stacks the (N_pad, k + r_b) panel: each device forms
+  its (W, k + r_b) slice ``[V_d diag(decay*s) | B_d^T U_b]``, one psum
+  of the (k + r_b)^2 panel Gram yields the small rotation ``W`` and the
+  new singular values ONCE (replicated), and each device applies ``W``
+  locally to produce its shard of the new ``v``.  The left factor
+  update ``U' = [U W[:k] ; U_b W[k:]]`` happens outside the region —
+  ``u`` is host-resident, in ingestion order, and only ever touched by
+  the small rotation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import functools
+from typing import Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map_nocheck as shard_map
 from repro.core import hierarchy, randomized, ranky, sparse
 from repro.core import svd as lsvd
 from repro.stream import state as stream_state
-from repro.stream.state import StreamingSVDState
+from repro.stream.state import STREAM_AXIS, StreamingSVDState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,11 +136,14 @@ def ingest(
     """Fold one batch of new rows into the state (see module docstring).
 
     ``config`` is an ``api.SolveConfig`` with ``truncate_rank`` set;
-    ``plan`` is the R5 plan from ``planner.make_stream_plan`` (its
+    ``plan`` is the R5/R5d plan from ``planner.make_stream_plan`` (its
     ``rank`` field is the batch-factorization decision: ``None`` =
-    exact gram stack, ``r`` = randomized sketch of rank r).
-    Returns ``(new_state, IngestInfo)``.
+    exact gram stack, ``r`` = randomized sketch of rank r; its
+    ``backend`` field routes to the single-host or the shard_map
+    engine).  Returns ``(new_state, IngestInfo)``.
     """
+    if plan.backend == "shard_map":
+        return ingest_shard_map(state, delta, config, plan)
     a_norm = stream_state.as_delta(delta, state)
     m_b, _ = stream_state.delta_shape(delta)
     d = state.num_blocks
@@ -139,6 +171,247 @@ def ingest(
     u_new = jnp.concatenate(
         [state.u @ uk[:k_old], u_b @ uk[k_old:]], axis=0)
 
+    new_state = StreamingSVDState(
+        u=u_new, s=s_new, v=v_new, key=state.key,
+        n=state.n, num_blocks=d,
+        rows_seen=state.rows_seen + m_b,
+        batches_seen=state.batches_seen + 1,
+        lonely_rows_seen=state.lonely_rows_seen + lonely_total,
+        repaired_rows_seen=state.repaired_rows_seen + repaired)
+    info = IngestInfo(
+        batch_rows=m_b, lonely_rows_per_block=lonely_pb,
+        lonely_rows=lonely_total, repaired_rows=repaired)
+    return new_state, info
+
+
+# ---------------------------------------------------------------------------
+# The shard_map engine (plan.backend == "shard_map", planner rule R5d)
+# ---------------------------------------------------------------------------
+
+def _merge_truncate_local(p_d: jnp.ndarray, axes: Tuple[str, ...],
+                          k_new: int):
+    """Per-device tail of the merge-and-truncate: from this device's
+    (W, k_tot) panel slice, psum the (k_tot, k_tot) panel Gram, eigh it
+    ONCE (replicated), and apply the small rotation locally.
+
+    ``P = V' diag(s') W^T`` means ``P^T P = W diag(s'^2) W^T``, so the
+    eigh of the psum'd Gram yields the rotation ``W`` and the new
+    singular values without any device touching the (N_pad, k_tot)
+    panel; the new ``v`` shard is ``P_d W diag(1/s')`` with a
+    floor-masked inverse (rank-deficient merge directions get zero
+    columns instead of noise — they carry zero weight into every later
+    merge, exactly like the single-host SVD's arbitrary null-space
+    columns).  Returns (s_new (k_new,), w (k_tot, k_new) — the ``uk``
+    rotation of ``hierarchy.merge_svd`` — and v_new_d (W, k_new))."""
+    k_tot = p_d.shape[1]
+    g = jax.lax.psum(p_d.T @ p_d, axes)               # (k_tot, k_tot)
+    evals, evecs = jnp.linalg.eigh(g)                 # ascending
+    evals = jnp.flip(evals, -1)
+    evecs = jnp.flip(evecs, -1)
+    s_all = jnp.sqrt(jnp.clip(evals, 0.0, None))
+    floor = jnp.finfo(g.dtype).eps * jnp.max(evals) * k_tot
+    good = evals[:k_new] > floor
+    inv = jnp.where(good, 1.0 / jnp.where(good, s_all[:k_new], 1.0), 0.0)
+    w = evecs[:, :k_new]
+    v_new_d = p_d @ (w * inv[None, :])
+    return s_all[:k_new], w, v_new_d
+
+
+def _dense_stream_shard_fn(
+    a_d: jnp.ndarray,       # (m_b, W) this device's delta column block
+    keys_d: jnp.ndarray,    # (1, ...) this device's split_and_repair key
+    k_batch: jax.Array,     # replicated batch key (sketch Omega)
+    v_d: jnp.ndarray,       # (W, k_old) this device's shard of state.v
+    s_old: jnp.ndarray,     # (k_old,) decayed singular values, replicated
+    *,
+    axes: Tuple[str, ...],
+    method: str,
+    use_kernel: bool,
+    r_b: int,
+    k_new: int,
+    sk_rank: Optional[int],
+    oversample: int,
+    power_iters: int,
+):
+    key_d = keys_d[0]
+    m_b = a_d.shape[0]
+    # Repair — same key chain and same (psum'd == global) adjacency as
+    # the single-host split_and_repair prologue, so the repaired batch
+    # is bit-identical to what the single-host engine factors.
+    adj = None
+    if method in ("neighbor", "neighbor_random"):
+        b = (a_d != 0).astype(jnp.float32)
+        adj = jax.lax.psum(b @ b.T, axes)
+        adj = (adj > 0) & ~jnp.eye(m_b, dtype=bool)
+    blk = ranky.repair_block(a_d, method, key_d, adj)
+    repaired = jax.lax.psum(
+        ranky.lonely_rows(a_d).sum() - ranky.lonely_rows(blk).sum(), axes)
+
+    if sk_rank is None:
+        g = jax.lax.psum(lsvd.gram(blk, use_kernel=use_kernel), axes)
+        u_b, _ = lsvd.eigh_to_svd(g)
+        u_b = u_b[:, :r_b]
+        panel_d = blk.T @ u_b                          # B_d^T U_b, (W, r_b)
+    else:
+        u_b, s_b, v_b_d = randomized.randomized_tail_over(
+            lambda om: randomized.sketch_block_dense(om, blk),
+            lambda gg: randomized.pullback_block_dense(gg, blk),
+            axes, m_b, rank=sk_rank, oversample=oversample,
+            power_iters=power_iters, key=k_batch, want_right=True)
+        panel_d = v_b_d * s_b[None, :]                 # V_d diag(s_b)
+
+    p_d = jnp.concatenate([v_d * s_old[None, :], panel_d], axis=1)
+    s_new, w, v_new_d = _merge_truncate_local(p_d, axes, k_new)
+    return u_b, s_new, w, v_new_d, repaired
+
+
+def _sparse_stream_shard_fn(
+    ids: jnp.ndarray,       # (1, C) this device's block's ELL arrays
+    rows: jnp.ndarray,      # (1, C, K)
+    vals: jnp.ndarray,      # (1, C, K)
+    keys_d: jnp.ndarray,
+    k_batch: jax.Array,
+    v_d: jnp.ndarray,
+    s_old: jnp.ndarray,
+    *,
+    m: int,
+    width: int,
+    axes: Tuple[str, ...],
+    method: str,
+    use_kernel: bool,
+    r_b: int,
+    k_new: int,
+    sk_rank: Optional[int],
+    oversample: int,
+    power_iters: int,
+):
+    ids, rows, vals = ids[0], rows[0], vals[0]
+    key_d = keys_d[0]
+    adj = None
+    if method in ("neighbor", "neighbor_random"):
+        p = sparse.stored_col_panel(rows, vals, m, binarize=True)
+        adj = jax.lax.psum(p.T @ p, axes)
+        adj = (adj > 0) & ~jnp.eye(m, dtype=bool)
+    rc, rm = ranky.repair_block_sparse(ids, rows, vals, method, key_d,
+                                       m=m, width=width, row_adj=adj)
+    repaired = jax.lax.psum(rm.sum(), axes)
+
+    if sk_rank is None:
+        g = jax.lax.psum(
+            lsvd.sparse_gram_block(ids, rows, vals, rc, rm, m,
+                                   use_kernel=use_kernel), axes)
+        u_b, _ = lsvd.eigh_to_svd(g)
+        u_b = u_b[:, :r_b]
+        panel_d = lsvd.sparse_right_vectors(
+            ids, rows, vals, rc, rm, width, u_b,
+            jnp.ones((r_b,), jnp.float32))             # B_d^T U_b
+    else:
+        u_b, s_b, v_b_d = randomized.randomized_tail_over(
+            lambda om: randomized.sketch_block_sparse(
+                om, ids, rows, vals, rc, rm, width),
+            lambda gg: randomized.pullback_block_sparse(
+                gg, ids, rows, vals, rc, rm, m),
+            axes, m, rank=sk_rank, oversample=oversample,
+            power_iters=power_iters, key=k_batch, want_right=True)
+        panel_d = v_b_d * s_b[None, :]
+
+    p_d = jnp.concatenate([v_d * s_old[None, :], panel_d], axis=1)
+    s_new, w, v_new_d = _merge_truncate_local(p_d, axes, k_new)
+    return u_b, s_new, w, v_new_d, repaired
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_ingest_fn(d: int, kind: str, m_b: int, width: int,
+                       r_b: int, k_new: int, sk_rank: Optional[int],
+                       oversample: int, power_iters: int, method: str,
+                       use_kernel: bool):
+    """(mesh, jitted shard_map callable) for one static ingest shape.
+
+    Cached so a steady-state stream (same batch shape, state at
+    truncate_rank) compiles its sharded update ONCE and replays it
+    every ingest — the jit cache keys on argument avals underneath, so
+    a shape change (e.g. the rank still growing toward truncate_rank)
+    retraces exactly like the single-host engine would."""
+    mesh = stream_state.stream_mesh(d)
+    axes = (STREAM_AXIS,)
+    common = dict(axes=axes, method=method, use_kernel=use_kernel,
+                  r_b=r_b, k_new=k_new, sk_rank=sk_rank,
+                  oversample=oversample, power_iters=power_iters)
+    if kind == "ell":
+        fn = functools.partial(_sparse_stream_shard_fn, m=m_b, width=width,
+                               **common)
+        in_specs = (P(axes), P(axes), P(axes),      # ids, rows, vals
+                    P(axes), P(),                   # keys, k_batch
+                    P(axes, None), P())             # v, s_old
+    else:
+        fn = functools.partial(_dense_stream_shard_fn, **common)
+        in_specs = (P(None, axes),                  # delta columns
+                    P(axes), P(),                   # keys, k_batch
+                    P(axes, None), P())             # v, s_old
+    out_specs = (P(), P(), P(), P(axes, None), P())
+    sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
+    return mesh, jax.jit(sharded)
+
+
+def ingest_shard_map(
+    state: StreamingSVDState,
+    delta,
+    config,
+    plan,
+) -> Tuple[StreamingSVDState, IngestInfo]:
+    """The distributed twin of :func:`ingest` — same four steps, one
+    ``shard_map`` region, per-device peak per planner rule R5d.  The
+    repaired batch is bit-identical to the single-host engine's (same
+    per-block key chain, same global adjacency), the collectives mirror
+    ``core/distributed.py``, and the factors agree with the single-host
+    result up to reduction-order float error and column signs."""
+    d = state.num_blocks
+    if jax.device_count() != d:
+        raise ValueError(
+            f"plan.backend='shard_map' needs one device per column "
+            f"block: num_blocks={d} but device_count={jax.device_count()}")
+    a_norm = stream_state.as_delta(delta, state)
+    m_b, _ = stream_state.delta_shape(delta)
+
+    k_batch = jax.random.fold_in(state.key, state.batches_seen)
+    keys = jax.random.split(k_batch, d)   # block d's split_and_repair key
+    lonely_pb = ranky.lonely_rows_per_block(a_norm, d)
+    lonely_total = sum(lonely_pb)
+
+    k_old = state.rank
+    r_b = (min(m_b, config.truncate_rank + config.oversample)
+           if plan.rank is None else plan.rank)
+    k_new = min(config.truncate_rank, k_old + r_b)
+    s_old = state.s * jnp.float32(config.history_decay)
+
+    sparse_in = isinstance(a_norm, sparse.BlockEll)
+    mesh, fn = _sharded_ingest_fn(
+        d, "ell" if sparse_in else "dense", m_b,
+        a_norm.width if sparse_in else a_norm.shape[1] // d,
+        r_b, k_new, plan.rank, config.oversample, config.power_iters,
+        config.method, config.use_kernel)
+    blk_sh = NamedSharding(mesh, P(STREAM_AXIS))
+    rep_sh = NamedSharding(mesh, P())
+    tail = (jax.device_put(keys, blk_sh),
+            jax.device_put(k_batch, rep_sh),
+            jax.device_put(state.v, NamedSharding(mesh, P(STREAM_AXIS, None))),
+            jax.device_put(s_old, rep_sh))
+    if sparse_in:
+        args = (jax.device_put(jnp.asarray(a_norm.col_ids), blk_sh),
+                jax.device_put(jnp.asarray(a_norm.col_rows), blk_sh),
+                jax.device_put(jnp.asarray(a_norm.col_vals), blk_sh))
+    else:
+        args = (jax.device_put(a_norm,
+                               NamedSharding(mesh, P(None, STREAM_AXIS))),)
+    u_b, s_new, uk, v_new, repaired = fn(*args, *tail)
+
+    # The left-factor update stays outside the region: u is in ingestion
+    # order and only the small (k_tot, k_new) rotation ever touches it.
+    u_new = jnp.concatenate(
+        [state.u @ uk[:k_old], u_b @ uk[k_old:]], axis=0)
+
+    repaired = int(np.asarray(repaired))
     new_state = StreamingSVDState(
         u=u_new, s=s_new, v=v_new, key=state.key,
         n=state.n, num_blocks=d,

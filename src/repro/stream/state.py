@@ -34,6 +34,16 @@ The state is a frozen, registered JAX pytree — it flows through
 ``jax.tree`` utilities and, via the pytree-dataclass support in
 ``checkpoint/ckpt.py``, through ``Checkpointer.save`` / ``restore``
 unchanged.
+
+**Sharded residency** (the distributed-ingestion path,
+``stream_backend="shard_map"``): ``v`` rows are in padded column order,
+so sharding them over a one-axis device mesh gives each device exactly
+one column block's (W, k) slice — the same one-block-per-device layout
+as ``core/distributed.py``.  :func:`shard_state` / :func:`gather_state`
+move a state between the sharded and single-device layouts without
+changing a single value; checkpoint saves always gather (the on-disk
+layout never bakes in a mesh) and ``Checkpointer.restore`` re-shards
+onto the CURRENT device count via ``reshard_for_restore``.
 """
 from __future__ import annotations
 
@@ -44,8 +54,13 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import ranky, sparse
+
+# The one mesh-axis name of the streaming shard_map engine (one column
+# block per device, like core/distributed.py's block axes).
+STREAM_AXIS = "blocks"
 
 
 @jax.tree_util.register_pytree_node_class
@@ -100,16 +115,60 @@ class StreamingSVDState:
         ORIGINAL column order, the front-door convention."""
         return self.v[:self.n]
 
+    def reshard_for_restore(self) -> "StreamingSVDState":
+        """Called by ``Checkpointer.restore`` after the pytree rebuild:
+        re-shard ``v`` onto the CURRENT device count when it matches the
+        column universe (checkpoints are saved gathered, so a state
+        saved on 8 devices restores onto 1 — and vice versa — without
+        the file knowing either layout)."""
+        if jax.device_count() == self.num_blocks and jax.device_count() > 1:
+            return shard_state(self)
+        return self
+
+
+def stream_mesh(num_blocks: int):
+    """The one-axis (num_blocks,) mesh the sharded ingest runs on — one
+    column block per device, same convention as core/distributed.py."""
+    if jax.device_count() != num_blocks:
+        raise ValueError(
+            f"sharded streaming needs one device per column block: "
+            f"num_blocks={num_blocks} but device_count="
+            f"{jax.device_count()}")
+    return jax.make_mesh((num_blocks,), (STREAM_AXIS,))
+
+
+def shard_state(state: StreamingSVDState, mesh=None) -> StreamingSVDState:
+    """``v`` sharded row-wise over the mesh (one column block's (W, k)
+    slice per device).  Values are untouched — ``u``/``s``/``key`` stay
+    replicated-small and placement is the only thing that changes."""
+    if mesh is None:
+        mesh = stream_mesh(state.num_blocks)
+    return dataclasses.replace(
+        state, v=jax.device_put(state.v, NamedSharding(mesh,
+                                                       P(STREAM_AXIS, None))))
+
+
+def gather_state(state: StreamingSVDState) -> StreamingSVDState:
+    """Every array on the default device — the layout a single-host
+    ingest (or any host-side consumer) expects.  Inverse of
+    :func:`shard_state`; values are untouched."""
+    dev = jax.devices()[0]
+    return jax.tree.map(lambda x: jax.device_put(x, dev), state)
+
 
 def init_state(
     n: int,
     *,
     num_blocks: int,
     key: Optional[jax.Array] = None,
+    mesh=None,
 ) -> StreamingSVDState:
     """A rank-0 state over an ``n``-column universe split ``num_blocks``
     ways.  The first ingest grows it to the batch's rank; no
-    special-casing anywhere (empty panels concatenate away)."""
+    special-casing anywhere (empty panels concatenate away).  Passing a
+    ``mesh`` (or ``mesh="auto"`` for the default one-block-per-device
+    mesh) starts the state in the sharded layout for
+    ``stream_backend="shard_map"`` streams."""
     if n < 1:
         raise ValueError(f"init_state needs n >= 1 columns, got {n}")
     if num_blocks < 1:
@@ -117,7 +176,7 @@ def init_state(
     if key is None:
         key = ranky.default_key()
     w = sparse.block_width(n, num_blocks)
-    return StreamingSVDState(
+    state = StreamingSVDState(
         u=jnp.zeros((0, 0), jnp.float32),
         s=jnp.zeros((0,), jnp.float32),
         v=jnp.zeros((num_blocks * w, 0), jnp.float32),
@@ -125,6 +184,9 @@ def init_state(
         n=n, num_blocks=num_blocks,
         rows_seen=0, batches_seen=0,
         lonely_rows_seen=0, repaired_rows_seen=0)
+    if mesh is None:
+        return state
+    return shard_state(state, None if mesh == "auto" else mesh)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,27 @@
 import os
+import subprocess
+import sys
+import textwrap
 
 # Tests exercise kernels explicitly with interpret=True; everything else
 # (models, integration) uses the pure-jnp reference path so CPU tests are
 # fast and the device count stays 1 (the 512-device env var is dryrun-only).
 os.environ.setdefault("REPRO_KERNELS", "ref")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_forced_devices(body: str, devices: int = 8) -> str:
+    """Run a snippet in a subprocess with ``devices`` forced host
+    devices.  jax pins the device count at first initialization, so
+    multi-device tests (test_distributed / test_api / test_streaming)
+    all use this one mechanism instead of in-process meshes."""
+    code = textwrap.dedent(body)
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               REPRO_KERNELS="ref",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout

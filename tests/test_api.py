@@ -4,10 +4,7 @@ bit-identical parity between svd() and the legacy driver shims for
 dense/COO/BlockEll inputs across backends, the documented key=None
 determinism shared by every driver, and the new want_right capability
 on the single-host and hierarchical drivers."""
-import os
-import subprocess
-import sys
-import textwrap
+import dataclasses
 
 import numpy as np
 import jax
@@ -21,8 +18,6 @@ from repro.core.api import (SolveConfig, SVDResult, as_block_input,
 from repro.core.hierarchy import hierarchical_ranky_svd
 from repro.core.planner import ASpec, PlanError
 from repro.core.ranky import ranky_svd
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _coo(m=24, n=1024, density=0.01, seed=0):
@@ -268,16 +263,7 @@ def test_parity_hierarchical_backend():
             _bitwise(res.s, s0)
 
 
-def run_py(body: str) -> str:
-    code = textwrap.dedent(body)
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               REPRO_KERNELS="ref",
-               PYTHONPATH=os.path.join(REPO, "src"))
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-4000:]
-    return out.stdout
+from conftest import run_forced_devices as run_py  # noqa: E402
 
 
 def test_parity_shard_map_backend_8_devices():
@@ -341,11 +327,20 @@ def test_auto_backend_sketches_tall_case_and_explains():
     assert res.plan.estimates["randomized"] == 466_944
     assert any("exceeds the budget" in r for r in res.plan.reasons)
     assert res.diagnostics.strategy == "randomized"
-    assert res.diagnostics.estimated_peak_bytes == \
-        res.plan.estimates["randomized"]
-    # ... and the result matches the explicitly-requested sketch bitwise.
-    u0, s0 = ranky_svd(ell, num_blocks=8, method="random", rank=6,
-                       oversample=32, power_iters=4)
+    assert res.diagnostics.estimated_peak_bytes == res.plan.peak_bytes
+    if res.plan.backend == "single":
+        assert res.plan.peak_bytes == res.plan.estimates["randomized"]
+        # ... and the result matches the explicitly-requested sketch
+        # bitwise.
+        u0, s0 = ranky_svd(ell, num_blocks=8, method="random", rank=6,
+                           oversample=32, power_iters=4)
+    else:
+        # One device per column block available (e.g. the CI's 8 forced
+        # host devices): auto runs the SAME sketch under shard_map and
+        # the peak is the smaller per-device form.
+        assert res.plan.backend == "shard_map"
+        assert res.plan.peak_bytes < res.plan.estimates["randomized"]
+        s0 = svd(ell, dataclasses.replace(cfg, backend="shard_map")).s
     _bitwise(res.s, s0)
 
 

@@ -4,26 +4,9 @@ jax fixes the device count at first initialization, so these run in
 SUBPROCESSES with XLA_FLAGS forcing 8 host devices — the same mechanism
 the dry-run uses for 512.
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_py(body: str) -> str:
-    code = textwrap.dedent(body)
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               REPRO_KERNELS="ref",
-               PYTHONPATH=os.path.join(REPO, "src"))
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-4000:]
-    return out.stdout
+from conftest import run_forced_devices as run_py
 
 
 def test_distributed_ranky_matches_numpy():

@@ -1,11 +1,16 @@
 """The streaming SVD subsystem (repro.stream + the api.svd_update /
-svd_stream front door): config validation, the R5 planner rule pinned
-against hand-computed byte estimates, pytree registration, equivalence
-of streaming over B batches with a one-shot svd() on the concatenated
-matrix (singular values AND the U subspace) for dense/COO/BlockEll
-deltas, the rank-problem streaming edition (a rank-deficient batch that
-requires repair before the truncated factorization), history decay,
-and bit-identical checkpoint save -> restore -> svd_update resume."""
+svd_stream front door): config validation, the R5/R5d planner rules
+pinned against hand-computed byte estimates, pytree registration,
+equivalence of streaming over B batches with a one-shot svd() on the
+concatenated matrix (singular values AND the U subspace) for
+dense/COO/BlockEll deltas, the rank-problem streaming edition (a
+rank-deficient batch that requires repair before the truncated
+factorization), history decay, bit-identical checkpoint
+save -> restore -> svd_update resume, the shard_map ingest engine
+(stream_backend="shard_map": sharded-v merge matching the single-host
+result, exercised in-process when 8 devices are forced and via a
+subprocess otherwise), and checkpoint portability across device counts
+(save sharded on 8, restore on 1, and vice versa)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -18,6 +23,14 @@ from repro.core.api import (ASpec, SolveConfig, plan_update, svd, svd_init,
 from repro.stream import StreamingSVDState, init_state
 
 RANK = 24
+
+from conftest import run_forced_devices
+
+eight_devices = pytest.mark.skipif(
+    jax.device_count() != 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(the CI streaming leg forces it; the subprocess twin covers "
+           "single-device runs)")
 
 
 def _spectrum_matrix(m=32, n=96, seed=0):
@@ -493,3 +506,312 @@ def test_checkpoint_rejects_sequence_children_loudly(tmp_path):
     # Plain user dicts must not collide with the restore markers.
     with pytest.raises(ValueError, match="__type__"):
         ck.save(2, {"cfg": {"__type__": "v1"}}, blocking=True)
+
+
+# ---------------------------------------------------------------------------
+# Planner rule R5d: the shard_map streaming variant — per-device byte
+# estimates pinned to the documented closed form, backend selection, and
+# the honest degrade to single-host
+# ---------------------------------------------------------------------------
+
+def test_r5d_byte_estimates_hand_computed():
+    # BATCH_SPEC: m=64, n=4096, D=8 -> W=512; k=16, p=8 -> l_b=24.
+    # merge slice per device: 4 * 2 * 512 * (16 + 24) = 163_840
+    assert planner.stream_merge_bytes_per_device(BATCH_SPEC, 16, 8) == \
+        163_840
+    # exact batch term per device (local gram + psum buffer):
+    # 4 * 64 * 64 = 16_384
+    assert planner.streaming_bytes_per_device(BATCH_SPEC, 16, 8,
+                                              exact=True) == \
+        16_384 + 163_840
+    # sketch per device at the rank the engine runs (r_b = l_b = 24,
+    # internal width L = min(24 + 8, 64) = 32):
+    # 4 * (32*512 + 2*64*32) = 81_920
+    assert planner.streaming_bytes_per_device(BATCH_SPEC, 16, 8,
+                                              exact=False) == \
+        81_920 + 163_840
+    # explicitly forced batch rank 12: L = min(12 + 8, 64) = 20 ->
+    # 4*(20*512 + 2*64*20) = 51_200; merge 4*2*512*(16+12) = 114_688
+    assert planner.streaming_bytes_per_device(
+        BATCH_SPEC, 16, 8, exact=False, batch_rank=12) == 51_200 + 114_688
+
+
+def test_r5d_backend_selection_and_honest_degrade():
+    cfg = SolveConfig(truncate_rank=16, stream_backend="shard_map")
+    p = planner.make_stream_plan(BATCH_SPEC, cfg, device_count=8)
+    assert p.backend == "shard_map" and p.strategy == "streaming"
+    assert p.rank is None  # exact batch factorization fits per device
+    assert p.peak_bytes == 16_384 + 163_840
+    assert p.estimates["stream_exact_per_device"] == p.peak_bytes
+    assert "independent of rows already ingested" in " ".join(p.reasons)
+    # shard_map requested but one-block-per-device impossible: degrade
+    # honestly (R5d never raises), with the single-host R5 peak.
+    p = planner.make_stream_plan(BATCH_SPEC, cfg, device_count=4)
+    assert p.backend == "single"
+    assert any("degrading honestly" in r for r in p.reasons)
+    assert p.peak_bytes == 131_072 + 1_310_720
+    # auto engages shard_map exactly when one device per block exists.
+    p = planner.make_stream_plan(BATCH_SPEC, SolveConfig(truncate_rank=16),
+                                 device_count=8)
+    assert p.backend == "shard_map"
+    p = planner.make_stream_plan(BATCH_SPEC, SolveConfig(truncate_rank=16),
+                                 device_count=1)
+    assert p.backend == "single"
+    # explicit single stays single even with a matching device count.
+    p = planner.make_stream_plan(
+        BATCH_SPEC, SolveConfig(truncate_rank=16, stream_backend="single"),
+        device_count=8)
+    assert p.backend == "single"
+
+
+def test_r5d_forced_rank_tracks_per_device_estimate():
+    cfg = SolveConfig(truncate_rank=16, rank=12, stream_backend="shard_map")
+    p = planner.make_stream_plan(BATCH_SPEC, cfg, device_count=8)
+    assert p.backend == "shard_map" and p.rank == 12
+    assert p.peak_bytes == planner.streaming_bytes_per_device(
+        BATCH_SPEC, 16, 8, exact=False, batch_rank=12)
+    assert any("explicitly" in r for r in p.reasons)
+
+
+def test_stream_backend_config_validation():
+    with pytest.raises(ValueError, match="stream_backend"):
+        SolveConfig(truncate_rank=8, stream_backend="proxy")
+    # stream_backend is a streaming knob: it needs truncate_rank.
+    with pytest.raises(ValueError) as exc:
+        SolveConfig(stream_backend="shard_map")
+    assert "stream_backend" in str(exc.value)
+    assert "truncate_rank" in str(exc.value)
+
+
+# ---------------------------------------------------------------------------
+# The shard_map ingest engine: sharded-v merge matches the single-host
+# result (acceptance bar 1e-5; S ranked, U/V up to sign) for all three
+# delta representations, including a rank-deficient batch that needs
+# repair.  In-process when 8 host devices are forced (the CI streaming
+# leg), via a subprocess twin otherwise.
+# ---------------------------------------------------------------------------
+
+def _assert_stream_results_match(r1, r2, j: int, tol: float):
+    """r2 (sharded) vs r1 (single-host): singular values within tol
+    (and ranked descending), leading-j U/V columns equal up to sign."""
+    s1, s2 = np.asarray(r1.s), np.asarray(r2.s)
+    assert np.abs(s1 - s2).max() <= tol * s1[0]
+    assert np.all(np.diff(s2) <= 1e-6 * s1[0])  # ranked
+    u1, u2 = np.asarray(r1.state.u), np.asarray(r2.state.u)
+    v1, v2 = np.asarray(r1.state.v), np.asarray(r2.state.v)
+    sign = np.sign((u1[:, :j] * u2[:, :j]).sum(axis=0))
+    assert np.abs(u1[:, :j] - u2[:, :j] * sign).max() <= tol
+    assert np.abs(v1[:, :j] - v2[:, :j] * sign).max() <= tol
+
+
+@eight_devices
+@pytest.mark.parametrize("kind", ["dense", "coo", "ell"])
+def test_sharded_ingest_matches_single_host(kind):
+    d, b = 8, 4
+    a = _spectrum_matrix(m=32, n=96)
+    base = dict(method="neighbor_random", truncate_rank=RANK, oversample=8,
+                num_blocks=d)
+    r1 = svd_stream(_row_batches(a, b, kind, d),
+                    SolveConfig(stream_backend="single", **base))
+    r2 = svd_stream(_row_batches(a, b, kind, d),
+                    SolveConfig(stream_backend="shard_map", **base))
+    assert r2.plan.backend == "shard_map"
+    assert r1.plan.backend == "single"
+    _assert_stream_results_match(r1, r2, j=8, tol=1e-5)
+    # The repair side-band counters agree exactly (psum'd == summed).
+    assert r2.state.lonely_rows_seen == r1.state.lonely_rows_seen
+    assert r2.state.repaired_rows_seen == r1.state.repaired_rows_seen
+
+
+@eight_devices
+def test_sharded_rank_deficient_batch_repair_matches_single_host():
+    """The rank problem, sharded edition: the per-device repair replays
+    the single-host key chain bit-identically, so the forced-sketch
+    factorization of a batch whose tail only exists after repair agrees
+    across engines."""
+    coo = sparse.ensure_full_row_rank(
+        sparse.random_bipartite(16, 1024, 0.006, seed=11, weighted=True),
+        seed=11)
+    dead = np.isin(coo.rows, (2, 9, 13))
+    coo = sparse.COOMatrix(rows=coo.rows[~dead], cols=coo.cols[~dead],
+                           vals=coo.vals[~dead], shape=coo.shape)
+    k = 15
+    base = dict(method="neighbor_random", truncate_rank=k, rank=k,
+                oversample=32, power_iters=4, num_blocks=8)
+    r1 = svd_stream([coo], SolveConfig(stream_backend="single", **base))
+    r2 = svd_stream([coo], SolveConfig(stream_backend="shard_map", **base))
+    assert r2.plan.backend == "shard_map" and r2.plan.rank == k
+    s1, s2 = np.asarray(r1.s), np.asarray(r2.s)
+    assert np.abs(s1 - s2).max() <= 1e-5 * s1[0]
+    assert float(s2[-1]) > 0.01 * s2[0]  # the repaired tail is real
+    assert r2.diagnostics.repaired_rows == r1.diagnostics.repaired_rows > 0
+
+
+@eight_devices
+def test_sharded_history_decay_matches_single_host():
+    d, b = 8, 4
+    a = _spectrum_matrix(m=32, n=96, seed=7)
+    base = dict(method="none", truncate_rank=32, oversample=8, num_blocks=d,
+                history_decay=0.5)
+    r1 = svd_stream(_row_batches(a, b, "dense", d),
+                    SolveConfig(stream_backend="single", **base))
+    r2 = svd_stream(_row_batches(a, b, "dense", d),
+                    SolveConfig(stream_backend="shard_map", **base))
+    assert r2.plan.backend == "shard_map"
+    s1, s2 = np.asarray(r1.s), np.asarray(r2.s)
+    assert np.abs(s1 - s2).max() <= 1e-5 * s1[0]
+
+
+def test_sharded_ingest_matches_single_host_subprocess():
+    """Subprocess twin of the in-process sharded tests, so a
+    single-device tier-1 run still exercises the shard_map engine on 8
+    forced host devices (same mechanism as tests/test_distributed.py)."""
+    if jax.device_count() == 8:
+        pytest.skip("in-process sharded tests cover this directly")
+    out = run_forced_devices("""
+        import numpy as np, jax
+        from repro.core import sparse
+        from repro.core.api import SolveConfig, svd_stream
+        assert jax.device_count() == 8
+        rng = np.random.default_rng(0)
+        u0, _ = np.linalg.qr(rng.standard_normal((32, 32)))
+        v0, _ = np.linalg.qr(rng.standard_normal((96, 32)))
+        a = ((u0 * np.geomspace(20.0, 0.5, 32)) @ v0.T).astype(np.float32)
+        def batches(kind):
+            out = []
+            for i in range(4):
+                rows = a[i * 8:(i + 1) * 8]
+                if kind == "dense":
+                    out.append(rows); continue
+                r, c = np.nonzero(rows)
+                coo = sparse.COOMatrix(
+                    rows=r.astype(np.int32), cols=c.astype(np.int32),
+                    vals=rows[r, c].astype(np.float32), shape=rows.shape)
+                out.append(coo if kind == "coo"
+                           else sparse.block_ell_from_coo(coo, 8))
+            return out
+        base = dict(method="neighbor_random", truncate_rank=24,
+                    oversample=8, num_blocks=8)
+        for kind in ("dense", "coo", "ell"):
+            r1 = svd_stream(batches(kind),
+                            SolveConfig(stream_backend="single", **base))
+            r2 = svd_stream(batches(kind),
+                            SolveConfig(stream_backend="shard_map", **base))
+            assert r2.plan.backend == "shard_map"
+            s1, s2 = np.asarray(r1.s), np.asarray(r2.s)
+            assert np.abs(s1 - s2).max() <= 1e-5 * s1[0], kind
+            u1 = np.asarray(r1.state.u)[:, :8]
+            u2 = np.asarray(r2.state.u)[:, :8]
+            sign = np.sign((u1 * u2).sum(axis=0))
+            assert np.abs(u1 - u2 * sign).max() <= 1e-5, kind
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint portability across device counts: saves are gathered (the
+# file never bakes in a mesh), restores re-shard onto the CURRENT
+# device count, and the next svd_update is bit-identical
+# ---------------------------------------------------------------------------
+
+@eight_devices
+def test_checkpoint_portability_sharded_roundtrip(tmp_path):
+    """Save a SHARDED state, restore (re-shards onto the 8 devices),
+    continue both sharded and gathered-single-host: bit-identical to
+    continuing the never-checkpointed state the same way.  And the
+    reverse direction: a single-host stream's checkpoint restores
+    straight into the sharded engine."""
+    from repro import stream
+
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((48, 128)).astype(np.float32)
+    cfg_sh = SolveConfig(method="random", truncate_rank=12, num_blocks=8,
+                         stream_backend="shard_map")
+    cfg_si = SolveConfig(method="random", truncate_rank=12, num_blocks=8,
+                         stream_backend="single")
+
+    state = svd_init(128, cfg_sh)
+    for i in range(3):
+        state = svd_update(state, a[i * 12:(i + 1) * 12], cfg_sh).state
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, state, blocking=True)
+    restored, _ = ck.restore(3)
+    assert isinstance(restored, StreamingSVDState)
+    for f in ("u", "s", "v", "key"):
+        np.testing.assert_array_equal(np.asarray(getattr(restored, f)),
+                                      np.asarray(getattr(state, f)))
+    # Continue SHARDED on both: bit-identical.
+    n1 = svd_update(state, a[36:48], cfg_sh).state
+    n2 = svd_update(restored, a[36:48], cfg_sh).state
+    for f in ("u", "s", "v"):
+        np.testing.assert_array_equal(np.asarray(getattr(n1, f)),
+                                      np.asarray(getattr(n2, f)))
+    # "Restore on 1": gather both and continue single-host —
+    # bit-identical again (the engine never sees the donor's layout).
+    g1 = svd_update(stream.gather_state(state), a[36:48], cfg_si).state
+    g2 = svd_update(stream.gather_state(restored), a[36:48], cfg_si).state
+    for f in ("u", "s", "v"):
+        np.testing.assert_array_equal(np.asarray(getattr(g1, f)),
+                                      np.asarray(getattr(g2, f)))
+    # Vice versa: a single-host stream's checkpoint feeds the sharded
+    # engine bit-identically.
+    st1 = svd_init(128, cfg_si)
+    for i in range(2):
+        st1 = svd_update(st1, a[i * 12:(i + 1) * 12], cfg_si).state
+    ck.save(10, st1, blocking=True)
+    rest1, _ = ck.restore(10)
+    m1 = svd_update(st1, a[24:36], cfg_sh).state
+    m2 = svd_update(rest1, a[24:36], cfg_sh).state
+    for f in ("u", "s", "v"):
+        np.testing.assert_array_equal(np.asarray(getattr(m1, f)),
+                                      np.asarray(getattr(m2, f)))
+
+
+def test_checkpoint_saved_on_8_devices_restores_on_1(tmp_path):
+    """True cross-device-count portability, two processes: an 8-device
+    process streams SHARDED and saves; a 1-device process restores the
+    same directory and continues single-host — bit-identical to the
+    donor's own gathered single-host continuation (dumped as reference
+    arrays next to the checkpoint)."""
+    ckdir = str(tmp_path)
+    common = """
+        import numpy as np, jax
+        from repro.checkpoint.ckpt import Checkpointer
+        from repro.core.api import SolveConfig, svd_init, svd_update
+        from repro import stream
+        rng = np.random.default_rng(3)
+        a = rng.standard_normal((48, 128)).astype(np.float32)
+    """
+    run_forced_devices(common + f"""
+        assert jax.device_count() == 8
+        cfg = SolveConfig(method="random", truncate_rank=12, num_blocks=8,
+                          stream_backend="shard_map")
+        state = svd_init(128, cfg)
+        for i in range(3):
+            state = svd_update(state, a[i*12:(i+1)*12], cfg).state
+        ck = Checkpointer({ckdir!r})
+        ck.save(3, state, blocking=True)
+        nxt = svd_update(stream.gather_state(state), a[36:48],
+                         SolveConfig(method="random", truncate_rank=12,
+                                     num_blocks=8,
+                                     stream_backend="single")).state
+        np.savez({ckdir!r} + "/ref.npz", u=np.asarray(nxt.u),
+                 s=np.asarray(nxt.s), v=np.asarray(nxt.v))
+        print("SAVED")
+    """)
+    out = run_forced_devices(common + f"""
+        assert jax.device_count() == 1
+        ck = Checkpointer({ckdir!r})
+        restored, _ = ck.restore(3)
+        assert restored.num_blocks == 8 and restored.batches_seen == 3
+        cfg = SolveConfig(method="random", truncate_rank=12, num_blocks=8,
+                          stream_backend="single")
+        nxt = svd_update(restored, a[36:48], cfg).state
+        ref = np.load({ckdir!r} + "/ref.npz")
+        for f in ("u", "s", "v"):
+            np.testing.assert_array_equal(np.asarray(getattr(nxt, f)),
+                                          ref[f])
+        print("OK")
+    """, devices=1)
+    assert "OK" in out
