@@ -6,7 +6,7 @@ and optionally machine-readable JSON.
       [--skip SECTION ...] [--only SECTION] [--json OUT.json]
 
 Sections: paper, rank_problem, merge, sparse, randomized, streaming,
-streaming_dist, lm.  ``--only SECTION`` runs just that section and
+streaming_scan, streaming_dist, lm.  ``--only SECTION`` runs just that section and
 ``--json OUT.json`` additionally writes one record per row with the
 fields CI consumes: ``section``, ``name``, ``shape`` ("MxN" parsed from
 the name, null when the row has no shape), ``us_per_call``, ``rel_err``
@@ -21,7 +21,7 @@ import re
 import sys
 
 SECTIONS = ("paper", "rank_problem", "merge", "sparse", "randomized",
-            "streaming", "streaming_dist", "lm")
+            "streaming", "streaming_scan", "streaming_dist", "lm")
 
 _SHAPE_RE = re.compile(r"(\d+)x(\d+)")
 _ERR_RE = re.compile(
@@ -97,6 +97,16 @@ def _run_streaming(rows, full: bool) -> None:
         rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
 
 
+def _run_streaming_scan(rows, full: bool) -> None:
+    from benchmarks import streaming_scan
+    print("# one-compilation stream driver (lax.scan windows, rule R6)",
+          flush=True)
+    for r in streaming_scan.run(**({"window": 32, "batch_rows": 64,
+                                    "cols": 2048, "rank": 16}
+                                   if full else {})):
+        rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
+
+
 def _run_streaming_dist(rows, full: bool) -> None:
     from benchmarks import streaming_dist
     print("# distributed streaming ingest (shard_map svd_update, rule R5d)",
@@ -121,6 +131,7 @@ _RUNNERS = {
     "sparse": _run_sparse,
     "randomized": _run_randomized,
     "streaming": _run_streaming,
+    "streaming_scan": _run_streaming_scan,
     "streaming_dist": _run_streaming_dist,
     "lm": _run_lm,
 }

@@ -1,0 +1,159 @@
+"""One-compilation stream driver A/B: per-batch loop vs ``lax.scan``
+windows (planner rule R6).
+
+The legacy streaming loop pays one jitted dispatch plus one
+device-to-host counter sync PER BATCH; ``stream.window.ingest_window``
+folds a whole window of same-bucket batches into ONE ``lax.scan``
+dispatch with ONE host materialization.  Both modes are the *same*
+compiled function (a loop is a length-1 window), so the A/B is
+bit-identical by construction — this benchmark measures only the
+dispatch amortization and proves it, reporting
+
+* amortized ns/batch for the per-batch loop (window=1) and the scan
+  window, best of ``reps`` passes each (compile excluded by a warm-up
+  pass) — the R6 claim is ``scan < loop`` at window >= 8;
+* ``bit_identical`` — final ``(u, s, v)`` of the two modes compared
+  bit for bit;
+* dispatch bookkeeping (``windows``/``batches``) and the compile-count
+  invariant: ONE bucket shape, one trace per distinct window length
+  (2 total: T=window and T=1) — never one per batch;
+* the R6 closed form: the window plan's ``peak_bytes`` next to the
+  hand-computed ``planner.window_bytes`` — equal or the plan lies;
+* ``rel_err`` of the streamed top-``rank`` singular values vs a
+  from-scratch ``np.linalg.svd`` oracle on the concatenated rows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core import planner
+from repro.core.api import ASpec, SolveConfig, svd_init, svd_update
+from repro.stream import window as sw
+
+RANK = 16
+OVERSAMPLE = 32
+
+
+def _spectral_batches(m_total, n, num_batches, seed):
+    """Row batches of a matrix with a decaying spectrum (so the
+    truncated stream tracks the oracle's top-k closely)."""
+    rng = np.random.default_rng(seed)
+    r = min(m_total, n, 128)
+    u = np.linalg.qr(rng.standard_normal((m_total, r)))[0]
+    v = np.linalg.qr(rng.standard_normal((n, r)))[0]
+    # head well above the rank-growth prologue's gaussian bulk (~sqrt(n))
+    # so the served top-k is the decaying spectrum, not warm-up noise
+    s = np.geomspace(100.0, 0.1, r)
+    a = (u * s[None, :]) @ v.T
+    mb = m_total // num_batches
+    return a.astype(np.float32), [
+        a[i * mb:(i + 1) * mb].astype(np.float32)
+        for i in range(num_batches)]
+
+
+def _steady(cols, cfg, grow, seed):
+    """Grow a fresh state to truncate_rank (the scan needs a steady
+    carry); returns the state AND the warm-up rows so the accuracy
+    oracle can account for every row the stream actually saw."""
+    state = svd_init(cols, cfg)
+    rng = np.random.default_rng(seed + 1)
+    warmup = []
+    while state.rank != cfg.truncate_rank:
+        rows = rng.standard_normal((grow, cols)).astype(np.float32)
+        warmup.append(rows)
+        state = svd_update(state, rows, cfg).state
+    return state, warmup
+
+
+def run(window=16, batch_rows=32, cols=512, blocks=8, rank=8,
+        reps=5, seed=2021, verbose=True):
+    assert window >= 8, "the R6 A/B claim is stated at window >= 8"
+    k = rank + OVERSAMPLE
+    cfg = SolveConfig(method="none", truncate_rank=k, oversample=OVERSAMPLE,
+                      num_blocks=blocks, stream_backend="single",
+                      window=window)
+    a, deltas = _spectral_batches(batch_rows * window, cols, window, seed)
+    state0, warmup = _steady(cols, cfg, batch_rows, seed)
+
+    spec = ASpec(m=batch_rows, n=cols, nnz=batch_rows * cols,
+                 num_blocks=blocks, kind="stream")
+    plan = planner.make_window_plan(spec, cfg, device_count=1)
+    assert plan.window == window, plan.reasons
+    r6_expected = planner.window_bytes(
+        spec, k, cfg.oversample, exact=plan.rank is None, window=window,
+        batch_rank=plan.rank)
+
+    sw.clear_caches()
+
+    def scan_pass():
+        st, _ = sw.ingest_window(state0, deltas, cfg, plan)
+        jax.block_until_ready((st.u, st.s, st.v))
+        return st
+
+    def loop_pass():
+        st = state0
+        for d in deltas:
+            st, _ = sw.ingest_window(st, [d], cfg, plan)
+        jax.block_until_ready((st.u, st.s, st.v))
+        return st
+
+    scan_state = scan_pass()          # warm-up passes pay the compiles
+    loop_state = loop_pass()
+    traces, buckets = sw.trace_count(), sw.bucket_count()
+    bit_identical = all(
+        (np.asarray(getattr(scan_state, f))
+         == np.asarray(getattr(loop_state, f))).all()
+        for f in ("u", "s", "v"))
+
+    sw.reset_dispatch_counts()
+    t_scan = min(_timed(scan_pass) for _ in range(reps))
+    t_loop = min(_timed(loop_pass) for _ in range(reps))
+    counts = sw.dispatch_counts()
+
+    s_true = np.linalg.svd(np.concatenate(warmup + [a]),
+                           compute_uv=False)[:rank]
+    rel = float(np.abs(np.asarray(scan_state.s)[:rank] - s_true).max()
+                / s_true[0])
+
+    scan_pb, loop_pb = t_scan / window, t_loop / window
+    shape = f"{batch_rows}x{cols}"
+    derived = (f"rel_err={rel:.2e};window={window}"
+               f";scan_ns_pb={int(scan_pb * 1e9)}"
+               f";loop_ns_pb={int(loop_pb * 1e9)}"
+               f";bit_identical={int(bit_identical)}"
+               f";windows={counts['windows']};batches={counts['batches']}"
+               f";traces={traces};buckets={buckets}"
+               f";r6_peak_b={plan.peak_bytes};r6_expected_b={r6_expected}")
+    if verbose:
+        print(f"  {window} x {shape} batches: scan "
+              f"{scan_pb * 1e6:8.1f}us/batch | loop "
+              f"{loop_pb * 1e6:8.1f}us/batch | x{loop_pb / scan_pb:.2f} | "
+              f"bit_identical={bit_identical} | traces={traces} "
+              f"(buckets={buckets}) | R6 peak {plan.peak_bytes} B "
+              f"(closed form {r6_expected} B)", flush=True)
+    return [
+        {"name": f"scan_window_{shape}", "seconds": scan_pb,
+         "derived": derived},
+        {"name": f"loop_per_batch_{shape}", "seconds": loop_pb,
+         "derived": f"window=1;batches={window}"},
+    ]
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main(full: bool = False):
+    kw = ({"window": 32, "batch_rows": 64, "cols": 2048, "rank": RANK}
+          if full else {})
+    return run(**kw)
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

@@ -17,6 +17,11 @@ OUT.json`` and then this script, which asserts
 * per-section invariants for the sections that carry them:
   - ``streaming``       — every ``stream_ingest_*`` row records the R5
     peak at the first AND last batch (the flat-memory proof);
+  - ``streaming_scan``  — every ``scan_window_*`` row proves rule R6:
+    scan amortized time/batch STRICTLY below the per-batch loop at
+    window >= 8, scan-vs-loop bit-identical, the plan's window peak
+    equal to the hand-computed R6 closed form, and one compiled trace
+    per bucket shape (never one per batch);
   - ``streaming_dist``  — every ``dist_stream_ingest_*`` row records
     the R5d PER-DEVICE peak at first/last batch plus the hand-computed
     expectation, first == last (flat), and first == expected whenever
@@ -66,8 +71,40 @@ def check_streaming_dist(recs) -> None:
                  f"R5d estimate {expected}")
 
 
+def check_streaming_scan(recs) -> None:
+    scan = [r for r in recs if r["name"].startswith("scan_window")]
+    assert scan, "streaming_scan section has no scan_window_* rows"
+    for r in scan:
+        d = r["derived"]
+        window = _derived_int(d, "window")
+        assert window >= 8, \
+            f"{r['name']}: the R6 A/B is stated at window >= 8, got {window}"
+        scan_ns = _derived_int(d, "scan_ns_pb")
+        loop_ns = _derived_int(d, "loop_ns_pb")
+        assert scan_ns < loop_ns, \
+            (f"{r['name']}: scan {scan_ns}ns/batch not strictly below the "
+             f"per-batch loop {loop_ns}ns/batch — R6 amortization claim "
+             f"does not hold")
+        assert _derived_int(d, "bit_identical") == 1, \
+            f"{r['name']}: scan and loop results are not bit-identical"
+        assert _derived_int(d, "r6_peak_b") == _derived_int(
+            d, "r6_expected_b"), \
+            (f"{r['name']}: plan window peak != hand-computed R6 closed "
+             f"form: {d!r}")
+        traces = _derived_int(d, "traces")
+        buckets = _derived_int(d, "buckets")
+        batches = _derived_int(d, "batches")
+        # one trace per (bucket, window length); the A/B uses exactly
+        # two lengths (T=window and T=1) per bucket — never one trace
+        # per batch
+        assert traces <= 2 * buckets < batches, \
+            (f"{r['name']}: {traces} traces over {buckets} bucket(s) for "
+             f"{batches} batches — retracing per batch?")
+
+
 SECTION_CHECKS = {
     "streaming": check_streaming,
+    "streaming_scan": check_streaming_scan,
     "streaming_dist": check_streaming_dist,
 }
 

@@ -45,6 +45,7 @@ Usage::
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import Any, Dict, Optional, Tuple, Union
 
@@ -122,6 +123,18 @@ class SolveConfig:
       R5d; degrades honestly to single-host when the device count does
       not match ``num_blocks``) or ``"auto"`` (shard_map exactly when
       one device per column block is available).
+    * ``window`` — streaming only (``svd_stream``): scan-window length
+      for the one-compilation stream driver (planner rule R6).  ``None``
+      lets the planner pick (target ``planner.DEFAULT_WINDOW``, shrunk
+      to fit the budget); ``1`` forces the per-batch loop (each batch
+      its own dispatch — same jitted step, so loop and scan results are
+      bit-identical); ``T`` folds up to T same-bucket batches into one
+      ``lax.scan`` dispatch.
+    * ``adaptive_width`` — streaming only: pick the exact batch
+      factorization's merge width ``l_b = k + p_eff`` from the observed
+      spectral tail of the running state (``stream.window.
+      adaptive_oversample``) instead of the static ``k + oversample``;
+      a width change re-buckets (and retraces) the scan.
     * ``memory_budget_bytes`` — planner budget (default 4 GiB).
     * ``key`` — PRNG key; ``None`` means ``default_key()``.
     """
@@ -143,6 +156,8 @@ class SolveConfig:
     truncate_rank: Optional[int] = None
     history_decay: float = 1.0
     stream_backend: str = "auto"
+    window: Optional[int] = None
+    adaptive_width: bool = False
     memory_budget_bytes: Optional[int] = None
     key: Optional[jax.Array] = None
 
@@ -194,6 +209,10 @@ class SolveConfig:
             raise ValueError(
                 f"invalid SolveConfig: memory_budget_bytes="
                 f"{self.memory_budget_bytes} must be >= 1")
+        if self.window is not None and self.window < 1:
+            raise ValueError(
+                f"invalid SolveConfig: window={self.window} must be >= 1 "
+                f"(1 = per-batch loop) or None for the planner default")
 
         # --- cross-field constraints (each names both fields) -------
         if self.undetermined_tail and self.merge_mode == "gram":
@@ -253,6 +272,19 @@ class SolveConfig:
                        "stream_backend picks the svd_update / svd_stream "
                        "engine; set truncate_rank=k to stream (one-shot "
                        "solves pick their backend with backend=)")
+        if self.window is not None and self.truncate_rank is None:
+            raise _bad("window", self.window, "truncate_rank", None,
+                       "the scan-window driver folds streaming ingests; "
+                       "set truncate_rank=k to stream")
+        if self.adaptive_width and self.truncate_rank is None:
+            raise _bad("adaptive_width", True, "truncate_rank", None,
+                       "the tail-adaptive merge width reads the streaming "
+                       "state's spectrum; set truncate_rank=k to stream")
+        if self.adaptive_width and self.rank is not None:
+            raise _bad("adaptive_width", True, "rank", self.rank,
+                       "rank= forces the randomized batch factorization "
+                       "whose width IS rank; the adaptive width picks the "
+                       "EXACT path's merge width — drop one of the two")
 
     def resolved_key(self) -> jax.Array:
         """The PRNG key this solve runs with (``default_key()`` if
@@ -315,7 +347,10 @@ class SVDResult:
 def describe(a: MatrixInput, num_blocks: int) -> ASpec:
     """Shape summary (M, N, nnz, D, kind) of any accepted input."""
     if isinstance(a, sparse.BlockEll):
-        nnz = int(np.count_nonzero(np.asarray(a.col_vals)))
+        # Containers built by block_ell_from_coo carry their exact nnz;
+        # hand-built ones without it fall back to counting stored values.
+        nnz = a.nnz if a.nnz is not None else int(
+            np.count_nonzero(np.asarray(a.col_vals)))
         return ASpec(m=a.m, n=a.n, nnz=nnz, num_blocks=num_blocks,
                      kind="ell")
     if isinstance(a, sparse.COOMatrix):
@@ -631,11 +666,15 @@ def _delta_nnz_estimate(delta) -> int:
     """Cheap nnz for the R5 plan's ASpec.  No R5 byte estimate or
     decision consults nnz — it is informational (``Plan.explain``) — so
     the ingest hot path must not scan or device-to-host-copy the batch
-    for it: exact O(1) for COO, stored-slot capacity (an upper bound,
-    no transfer) for BlockEll, m*n for dense."""
+    for it: exact O(1) for COO; exact O(1) for a BlockEll that recorded
+    its true nnz at construction (``block_ell_from_coo`` always does);
+    stored-slot capacity (an upper bound, no transfer) for one that did
+    not; m*n for dense."""
     if isinstance(delta, sparse.COOMatrix):
         return delta.nnz
     if isinstance(delta, sparse.BlockEll):
+        if delta.nnz is not None:
+            return delta.nnz
         return int(np.prod(delta.col_vals.shape))
     shape = getattr(delta, "shape", None) or np.shape(delta)
     return int(shape[0]) * int(shape[1])  # shape metadata, data untouched
@@ -762,33 +801,111 @@ def svd_stream(batches, config: Optional[SolveConfig] = None, *,
                state=None, **overrides) -> SVDResult:
     """Ingest a whole sequence of deltas and return the final result.
 
-    Convenience loop over :func:`svd_update`: initializes the state
-    from the first batch's shape (unless ``state`` is given), folds
-    every batch in, and returns the last result with CUMULATIVE
-    diagnostics (lonely/repaired counts summed over THIS call's
-    batches — a resumed stream's pre-existing history is not
-    re-counted — plus total wall time; ``lonely_rows_per_block`` stays
-    the last batch's).
+    ``batches`` may be any iterable — a list, a generator, a socket
+    reader — and is consumed window-by-window, never materialized.  Two
+    regimes, switched per batch:
+
+    * while the state's rank is still growing toward ``truncate_rank``,
+      each batch runs through the per-batch engine (the scan carry is
+      fixed-shape, so the transient can't ride in it);
+    * at steady rank, consecutive batches with the same
+      ``stream.window.bucket_signature`` are grouped into windows of up
+      to ``plan.window`` batches (planner rule R6; ``config.window``
+      overrides, 1 = per-batch loop) and each window runs as ONE
+      ``lax.scan`` dispatch with the state device-resident throughout.
+      ``config.adaptive_width`` re-picks the exact merge width from the
+      state's spectral tail at every window boundary.
+
+    Returns the final :class:`SVDResult` with CUMULATIVE diagnostics
+    (lonely/repaired counts summed over THIS call's batches — a resumed
+    stream's pre-existing history is not re-counted — plus total wall
+    time; ``lonely_rows_per_block`` stays the last batch's) and the last
+    window's R6 plan (or the last per-batch R5 plan if the whole stream
+    stayed in the rank-growth regime).
     """
+    from repro import stream as streaming
+    from repro.stream import window as swindow
+
     config = _require_stream_config(_coerce_config(config, overrides))
-    batches = list(batches)
-    if not batches:
+    it = iter(batches)
+    try:
+        first = next(it)
+    except StopIteration:
         raise ValueError("svd_stream needs at least one batch")
     t0 = time.perf_counter()
     if state is None:
-        n, d = _batch_universe(batches[0])
+        n, d = _batch_universe(first)
         cfg0 = config if (d is None or config.num_blocks is not None) \
             else dataclasses.replace(config, num_blocks=d)
         state = svd_init(n, cfg0)
+    if (config.num_blocks is not None
+            and config.num_blocks != state.num_blocks):
+        raise ValueError(
+            f"config.num_blocks={config.num_blocks} but the state's "
+            f"column universe has num_blocks={state.num_blocks}; the "
+            f"universe is fixed at svd_init time")
     base_lonely = state.lonely_rows_seen
     base_repaired = state.repaired_rows_seen
-    res = None
-    for delta in batches:
-        res = svd_update(state, delta, config)
-        state = res.state
-    diag = dataclasses.replace(
-        res.diagnostics,
+    k = config.truncate_rank
+
+    last_plan = None
+    last_pb: Tuple[int, ...] = ()
+    pending: list = []          # normalized same-bucket deltas
+    pending_sig = None
+    pending_cfg = config        # window's effective config (adaptive l_b)
+    pending_plan = None
+
+    def flush():
+        nonlocal state, last_plan, last_pb, pending, pending_sig
+        if not pending:
+            return
+        state, info = swindow.ingest_window(state, pending, pending_cfg,
+                                            pending_plan)
+        last_plan, last_pb = pending_plan, info.lonely_rows_per_block
+        pending, pending_sig = [], None
+
+    for delta in itertools.chain([first], it):
+        if state.rank != k:
+            # Rank-growth prologue: the legacy per-batch ingest until
+            # the carry shape is steady (flush() is a no-op here — the
+            # rank can only grow, never shrink back below k).
+            p = plan_update(delta, config, state=state)
+            state, info = streaming.ingest(state, delta, config, p)
+            last_plan, last_pb = p, info.lonely_rows_per_block
+            continue
+        norm = streaming.as_delta(delta, state)
+        sig = swindow.bucket_signature(norm)
+        if pending and sig != pending_sig:
+            flush()
+        if not pending:
+            pending_sig = sig
+            pending_cfg = config
+            if config.adaptive_width:
+                eff = swindow.adaptive_oversample(
+                    np.asarray(state.s), k, config.oversample)
+                if eff != config.oversample:
+                    pending_cfg = dataclasses.replace(config,
+                                                      oversample=eff)
+            spec = ASpec(m=sig[1], n=state.n,
+                         nnz=_delta_nnz_estimate(norm),
+                         num_blocks=state.num_blocks, kind="stream")
+            pending_plan = planner.make_window_plan(
+                spec, pending_cfg, device_count=jax.device_count(),
+                nnz_slots=swindow.bucket_nnz_slots(sig, state.num_blocks))
+        pending.append(norm)
+        if len(pending) >= pending_plan.window:
+            flush()
+    flush()
+    jax.block_until_ready((state.u, state.s, state.v))
+    wall = time.perf_counter() - t0
+
+    diag = Diagnostics(
+        lonely_rows_per_block=last_pb,
         lonely_rows=state.lonely_rows_seen - base_lonely,
         repaired_rows=state.repaired_rows_seen - base_repaired,
-        wall_time_s=time.perf_counter() - t0)
-    return dataclasses.replace(res, diagnostics=diag)
+        strategy=last_plan.strategy,
+        estimated_peak_bytes=last_plan.estimated_peak_bytes,
+        wall_time_s=wall)
+    v = state.trimmed_v() if config.want_right else None
+    return SVDResult(u=state.u, s=state.s, v=v, plan=last_plan,
+                     diagnostics=diag, state=state)

@@ -30,8 +30,12 @@ def merge_svd(p: jnp.ndarray, rank: int):
     """SVD-merge a wide (M, R) panel concatenation, truncated to ``rank``.
 
     The ONE merge primitive of the incremental algorithm, shared by the
-    tree merge below and the streaming merge-and-truncate engine
-    (``repro.stream.ingest``).  Returns ``(U (M, rank), S (rank,),
+    tree merge below, the streaming merge-and-truncate engine
+    (``repro.stream.ingest``), and the scan-window driver
+    (``repro.stream.window``), whose ``lax.scan`` body calls it once per
+    folded batch — fixed-shape at steady rank, which is exactly what
+    makes whole ingestion windows one compiled dispatch.  Returns
+    ``(U (M, rank), S (rank,),
     W (R, rank))`` with ``P = U diag(S) W^T + (discarded tail)``; all
     three are zero-padded when ``rank > min(M, R)`` so output shapes
     stay static.  ``W`` is what streaming needs: for

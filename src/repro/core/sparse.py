@@ -33,7 +33,7 @@ agreement.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -209,10 +209,14 @@ class BlockEll:
     m: int                 # global row count M
     width: int             # block width W (columns per device block)
     n: int                 # original (unpadded) global column count
+    nnz: Optional[int] = None  # TRUE stored nonzeros (after coalescing),
+                               # recorded at construction so planners get
+                               # an exact count without scanning device
+                               # arrays; None for hand-built containers
 
     def tree_flatten(self):
         return ((self.col_ids, self.col_rows, self.col_vals),
-                (self.m, self.width, self.n))
+                (self.m, self.width, self.n, self.nnz))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -325,6 +329,12 @@ def block_ell_from_coo(
     identity for them — and COOMatrix.todense accumulates the same way,
     keeping the sparse and dense paths on the same matrix even for
     multigraph inputs.
+
+    The coalesced triple count is recorded as ``BlockEll.nnz`` so
+    downstream planners (``api._delta_nnz_estimate``, ``api.describe``)
+    see the EXACT stored-nonzero count instead of the padded slot
+    capacity — known here on the host for free, with no device
+    transfer ever needed on a hot path.
     """
     m, n = coo.shape
     pair = coo.rows.astype(np.int64) * n + coo.cols.astype(np.int64)
@@ -366,4 +376,4 @@ def block_ell_from_coo(
         col_rows[d, slot_col, slot_k] = lr
         col_vals[d, slot_col, slot_k] = lv
     return BlockEll(col_ids=col_ids, col_rows=col_rows, col_vals=col_vals,
-                    m=m, width=w, n=n)
+                    m=m, width=w, n=n, nnz=coo.nnz)

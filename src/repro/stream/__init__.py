@@ -5,13 +5,22 @@ Turns the one-shot solver into a long-lived service: a checkpointable
 :func:`~repro.stream.ingest.ingest` engine that folds batches of new
 rows (dense, COO, or BlockEll deltas) into the truncated factorization
 via Ranky-repaired, sparse-native batch factorization and a
-hierarchy-style panel merge.  The public front door lives at
-``repro.core.api.svd_update`` / ``svd_stream`` / ``svd_init``.
+hierarchy-style panel merge.  ``repro.stream.window`` is the
+one-compilation driver on top: whole windows of same-bucket batches in
+a single ``lax.scan`` dispatch (planner rule R6).  The public front
+door lives at ``repro.core.api.svd_update`` / ``svd_stream`` /
+``svd_init``.
 """
 from repro.stream.ingest import (  # noqa: F401
     IngestInfo,
     ingest,
     ingest_shard_map,
+)
+from repro.stream.window import (  # noqa: F401
+    adaptive_oversample,
+    bucket_signature,
+    build_window,
+    ingest_window,
 )
 from repro.stream.state import (  # noqa: F401
     STREAM_AXIS,
@@ -26,6 +35,7 @@ from repro.stream.state import (  # noqa: F401
 
 __all__ = [
     "StreamingSVDState", "init_state", "ingest", "ingest_shard_map",
-    "IngestInfo", "as_delta", "delta_shape", "shard_state",
-    "gather_state", "stream_mesh", "STREAM_AXIS",
+    "ingest_window", "bucket_signature", "build_window",
+    "adaptive_oversample", "IngestInfo", "as_delta", "delta_shape",
+    "shard_state", "gather_state", "stream_mesh", "STREAM_AXIS",
 ]

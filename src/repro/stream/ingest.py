@@ -155,9 +155,6 @@ def ingest(
 
     # Repair BEFORE factorization/truncation (the rank problem).
     blocks = ranky.split_and_repair(a_norm, d, config.method, k_batch)
-    lonely_pb = ranky.lonely_rows_per_block(a_norm, d)
-    lonely_total = sum(lonely_pb)
-    repaired = _repaired_count(blocks, lonely_total)
 
     u_b, panel_b = _factor_batch(blocks, m_b, config, plan, k_batch)
 
@@ -170,6 +167,15 @@ def ingest(
     v_new, s_new, uk = hierarchy.merge_svd(p, k_new)  # uk: (k_old+r_b, k_new)
     u_new = jnp.concatenate(
         [state.u @ uk[:k_old], u_b @ uk[k_old:]], axis=0)
+
+    # Side-band diagnostics LAST: the device-to-host reads happen only
+    # after the whole factor/merge pipeline is enqueued, so the sync
+    # overlaps the math instead of serializing the dispatch.  (The
+    # scan-window driver in stream/window.py goes further and keeps
+    # the counters in the scan carry for a whole window.)
+    lonely_pb = ranky.lonely_rows_per_block(a_norm, d)
+    lonely_total = sum(lonely_pb)
+    repaired = _repaired_count(blocks, lonely_total)
 
     new_state = StreamingSVDState(
         u=u_new, s=s_new, v=v_new, key=state.key,
@@ -376,8 +382,6 @@ def ingest_shard_map(
 
     k_batch = jax.random.fold_in(state.key, state.batches_seen)
     keys = jax.random.split(k_batch, d)   # block d's split_and_repair key
-    lonely_pb = ranky.lonely_rows_per_block(a_norm, d)
-    lonely_total = sum(lonely_pb)
 
     k_old = state.rank
     r_b = (min(m_b, config.truncate_rank + config.oversample)
@@ -411,6 +415,11 @@ def ingest_shard_map(
     u_new = jnp.concatenate(
         [state.u @ uk[:k_old], u_b @ uk[k_old:]], axis=0)
 
+    # Side-band diagnostics AFTER the sharded dispatch: the lonely-count
+    # host read no longer serializes the region launch (the scan-window
+    # driver removes even this per-batch read).
+    lonely_pb = ranky.lonely_rows_per_block(a_norm, d)
+    lonely_total = sum(lonely_pb)
     repaired = int(np.asarray(repaired))
     new_state = StreamingSVDState(
         u=u_new, s=s_new, v=v_new, key=state.key,

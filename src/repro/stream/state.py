@@ -224,6 +224,13 @@ def as_delta(delta: Delta, state: StreamingSVDState):
     if m_b < 1:
         raise ValueError(f"delta has {m_b} rows; an ingest needs >= 1")
     if n_d != state.n:
+        if (n_d == state.n_pad
+                and not isinstance(delta, (sparse.BlockEll,
+                                           sparse.COOMatrix))):
+            # Already in padded column order (n_pad = D * W): the
+            # normalization is idempotent, so the window driver can
+            # normalize once for bucketing and re-submit the result.
+            return jnp.asarray(delta, dtype=jnp.float32)
         raise ValueError(
             f"delta has {n_d} columns but the streaming state's column "
             f"universe is n={state.n}; deltas must be indexed by the "
