@@ -1,0 +1,20 @@
+"""ranky-lint: an AST-based static analyzer for this repo's JAX
+discipline (host syncs, PRNG hygiene, collective axes, densify bans,
+recompile hazards, pytree registration).
+
+Public API:
+
+    from repro.analysis import analyze_paths, analyze_sources, all_rules
+
+See ``src/repro/analysis/README.md`` for the rule catalog and
+``scripts/ranky_lint.py`` for the CLI.
+"""
+from repro.analysis.core import Finding, Rule, all_rules, get_rule
+from repro.analysis.runner import (AnalysisResult, analyze_paths,
+                                   analyze_sources, discover_files)
+from repro.analysis import rules as _rules  # noqa: F401  (registers RL1xx)
+
+__all__ = [
+    "Finding", "Rule", "all_rules", "get_rule",
+    "AnalysisResult", "analyze_paths", "analyze_sources", "discover_files",
+]

@@ -1,0 +1,423 @@
+"""Compiled-region analysis: which functions' bodies end up *traced*.
+
+The hot-path rules (RL101/RL103/RL105) only make sense inside code that
+JAX traces into a compiled computation.  This module computes, per
+parsed file, a conservative region map:
+
+* **Region roots** — functions decorated/wrapped with ``jax.jit`` (incl.
+  ``functools.partial(jax.jit, static_argnames=...)``), functions bound
+  as the body of structured control flow (``lax.scan`` / ``while_loop``
+  / ``fori_loop`` / ``cond`` / ``switch`` / ``map`` — their bodies are
+  traced even outside an enclosing jit), and functions passed to
+  ``shard_map`` (any alias whose name ends in ``shard_map`` /
+  ``shard_map_nocheck``).
+* **Propagation** — membership flows through the *module-local* call
+  graph (calls to functions defined in the same file, resolved through
+  local single-assignment chains and ``functools.partial`` wrappers) to
+  a fixpoint.  A function reached through a ``shard_map`` root carries
+  the ``shard_map`` flag; RL103 uses the distinction.  Cross-module
+  calls are not followed — a deliberate precision/recall trade
+  documented in the package README.
+
+Region membership is computed once per file and shared by every rule.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.visitor import (
+    ImportTable, attach_parents, is_jit_name, is_partial_name,
+    is_shard_map_name, string_elements, walk_skipping_functions)
+
+__all__ = ["FunctionInfo", "ModuleInfo", "ProjectContext", "build_module"]
+
+# lax control-flow binders: canonical tail -> indices of traced-callable
+# positional args.  (cond/switch trace every branch; fori_loop's body is
+# its third argument.)
+_CONTROL_FLOW_BINDERS: Dict[str, Tuple[int, ...]] = {
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "cond": (1, 2),
+    "switch": (1, 2, 3, 4, 5, 6, 7),   # branches: every trailing callable
+    "map": (0,),
+    "associative_scan": (0,),
+}
+_CONTROL_FLOW_MODULES = ("jax.lax", "lax", "jax.experimental.shard_map")
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One function/lambda: its AST, lexical scope chain and the local
+    single-assignment table used to resolve callables."""
+
+    node: ast.AST                       # FunctionDef | Lambda
+    qualname: str
+    scope_parent: Optional["FunctionInfo"]
+    assignments: Dict[str, ast.AST] = dataclasses.field(default_factory=dict)
+    local_defs: Dict[str, "FunctionInfo"] = dataclasses.field(
+        default_factory=dict)
+    static_params: Set[str] = dataclasses.field(default_factory=set)
+    # region flags (filled by the fixpoint)
+    in_region: bool = False
+    via_shard_map: bool = False
+    region_kinds: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+
+@dataclasses.dataclass
+class ClassDef:
+    node: ast.ClassDef
+    qualname: str
+    is_dataclass: bool
+    is_registered: bool          # register_pytree_node_class / _node(...)
+    array_fields: List[str]
+
+
+class ModuleInfo:
+    """One parsed file plus every shared analysis the rules consume."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.tree = tree
+        self.imports = ImportTable(tree)
+        self.functions: Dict[ast.AST, FunctionInfo] = {}
+        self.module_defs: Dict[str, FunctionInfo] = {}
+        self.classes: Dict[str, ClassDef] = {}
+        self.str_constants: Dict[str, str] = {}
+        self.declared_axes: Set[str] = set()
+        self.registered_calls: Set[str] = set()   # register_pytree_node(X)
+
+    # -- canonical-name helpers -------------------------------------------
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        return self.imports.resolve(node)
+
+    def resolve_or_name(self, node: ast.AST) -> Optional[str]:
+        return self.imports.resolve_or_name(node)
+
+    # -- callable resolution ----------------------------------------------
+    def resolve_callable(self, node: ast.AST,
+                         scope: Optional[FunctionInfo],
+                         _depth: int = 0) -> Optional[FunctionInfo]:
+        """Best-effort: the FunctionInfo a callable expression refers to
+        — through local assignments, nested defs, module-level defs and
+        ``functools.partial`` / ``jax.jit`` wrappers.  None when the
+        target is a parameter, an attribute of another module, etc."""
+        if _depth > 12 or node is None:
+            return None
+        if isinstance(node, ast.Lambda):
+            return self.functions.get(node)
+        if isinstance(node, ast.Name):
+            s = scope
+            while s is not None:
+                if node.id in s.local_defs:
+                    return s.local_defs[node.id]
+                if node.id in s.assignments:
+                    return self.resolve_callable(
+                        s.assignments[node.id], s, _depth + 1)
+                s = s.scope_parent
+            return self.module_defs.get(node.id)
+        if isinstance(node, ast.Call):
+            fn_name = self.resolve_or_name(node.func)
+            if (is_partial_name(fn_name) or is_jit_name(fn_name)) and node.args:
+                return self.resolve_callable(node.args[0], scope, _depth + 1)
+        return None
+
+    def enclosing_function(self, node: ast.AST) -> Optional[FunctionInfo]:
+        from repro.analysis.visitor import parent
+        n = parent(node)
+        while n is not None:
+            if n in self.functions:
+                return self.functions[n]
+            n = parent(n)
+        return None
+
+
+class ProjectContext:
+    """Facts aggregated across every analyzed file (two-pass)."""
+
+    def __init__(self, modules: List[ModuleInfo]):
+        self.modules = modules
+        self.declared_axes: Set[str] = set()
+        # class simple-name -> (ClassDef, ModuleInfo)
+        self.dataclasses: Dict[str, Tuple[ClassDef, ModuleInfo]] = {}
+        registered_by_call: Set[str] = set()
+        for m in modules:
+            self.declared_axes |= m.declared_axes
+            registered_by_call |= m.registered_calls
+            for name, cd in m.classes.items():
+                if cd.is_dataclass:
+                    self.dataclasses.setdefault(name, (cd, m))
+        for name in registered_by_call:
+            if name in self.dataclasses:
+                self.dataclasses[name][0].is_registered = True
+
+
+# ---------------------------------------------------------------------------
+# Module construction
+# ---------------------------------------------------------------------------
+
+def build_module(path: str, source: str) -> ModuleInfo:
+    tree = ast.parse(source, filename=path)
+    attach_parents(tree)
+    m = ModuleInfo(path, source, tree)
+    _collect_constants(m)
+    _collect_functions(m)
+    _collect_classes(m)
+    _collect_axes(m)
+    _region_fixpoint(m)
+    return m
+
+
+def _collect_constants(m: ModuleInfo) -> None:
+    for node in m.tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, str)):
+            m.str_constants[node.targets[0].id] = node.value.value
+
+
+def _static_params_of(fn_node: ast.AST, m: ModuleInfo) -> Set[str]:
+    """Parameter names a jit decorator marks static (static_argnames
+    literals; static_argnums resolved positionally)."""
+    out: Set[str] = set()
+    if not isinstance(fn_node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return out
+    pos = [p.arg for p in fn_node.args.posonlyargs + fn_node.args.args]
+    for dec in fn_node.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        name = m.resolve_or_name(dec.func)
+        if not (is_jit_name(name) or
+                (is_partial_name(name) and dec.args
+                 and is_jit_name(m.resolve_or_name(dec.args[0])))):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                out.update(string_elements(kw.value, m.str_constants))
+            elif kw.arg == "static_argnums":
+                for el in ([kw.value] if isinstance(kw.value, ast.Constant)
+                           else getattr(kw.value, "elts", [])):
+                    if (isinstance(el, ast.Constant)
+                            and isinstance(el.value, int)
+                            and el.value < len(pos)):
+                        out.add(pos[el.value])
+    return out
+
+
+def _collect_functions(m: ModuleInfo) -> None:
+    def visit(node: ast.AST, scope: Optional[FunctionInfo], prefix: str):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = f"{prefix}{child.name}"
+                fi = FunctionInfo(child, qn, scope)
+                fi.static_params = _static_params_of(child, m)
+                m.functions[child] = fi
+                if scope is None:
+                    m.module_defs[child.name] = fi
+                else:
+                    scope.local_defs[child.name] = fi
+                _collect_assignments(child, fi)
+                visit(child, fi, qn + ".")
+            elif isinstance(child, ast.Lambda):
+                fi = FunctionInfo(child, f"{prefix}<lambda>", scope)
+                m.functions[child] = fi
+                visit(child, fi, prefix)
+            elif isinstance(child, ast.ClassDef):
+                visit(child, scope, f"{prefix}{child.name}.")
+            else:
+                visit(child, scope, prefix)
+
+    visit(m.tree, None, "")
+
+
+def _collect_assignments(fn_node: ast.AST, fi: FunctionInfo) -> None:
+    """Single-assignment table for this scope (simple Name targets at
+    any nesting below the function, nested defs excluded)."""
+    for node in walk_skipping_functions(fn_node):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    # last writer wins; good enough for the
+                    # straight-line partial/step idiom we resolve
+                    fi.assignments[t.id] = node.value
+
+
+def _collect_classes(m: ModuleInfo) -> None:
+    for node in ast.walk(m.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        is_dc = is_reg = False
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = m.resolve_or_name(target) or ""
+            tail = name.rsplit(".", 1)[-1]
+            if tail == "dataclass":
+                is_dc = True
+            if tail in ("register_pytree_node_class",
+                        "register_pytree_with_keys_class"):
+                is_reg = True
+        arrays = [st.target.id for st in node.body
+                  if isinstance(st, ast.AnnAssign)
+                  and isinstance(st.target, ast.Name)
+                  and _is_array_annotation(st.annotation, m)]
+        m.classes[node.name] = ClassDef(node, node.name, is_dc, is_reg,
+                                        arrays)
+    # module-level register_pytree_node(X, ...) / register_dataclass(X, ...)
+    for node in ast.walk(m.tree):
+        if isinstance(node, ast.Call):
+            name = m.resolve_or_name(node.func) or ""
+            if (name.rsplit(".", 1)[-1] in
+                    ("register_pytree_node", "register_pytree_with_keys",
+                     "register_dataclass")
+                    and node.args and isinstance(node.args[0], ast.Name)):
+                m.registered_calls.add(node.args[0].id)
+                if node.args[0].id in m.classes:
+                    m.classes[node.args[0].id].is_registered = True
+
+
+def _is_array_annotation(ann: ast.AST, m: ModuleInfo) -> bool:
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return any(t in ann.value for t in ("jnp.ndarray", "jax.Array",
+                                            "Array", "ndarray"))
+    name = m.resolve_or_name(ann)
+    if name is None and isinstance(ann, ast.Attribute):
+        name = f"{m.resolve_or_name(ann.value)}.{ann.attr}"
+    if not name:
+        return False
+    return name in ("jax.Array", "jax.numpy.ndarray", "numpy.ndarray",
+                    "jnp.ndarray", "np.ndarray", "Array", "ndarray")
+
+
+def _collect_axes(m: ModuleInfo) -> None:
+    """Declared mesh-axis names: ``Mesh(devs, (<axes>))`` /
+    ``jax.make_mesh(shape, (<axes>))`` second args plus ``*_AXIS``
+    module string constants (the repo's STREAM_AXIS idiom)."""
+    for name, val in m.str_constants.items():
+        if name.endswith("_AXIS") or name.endswith("AXIS_NAME"):
+            m.declared_axes.add(val)
+    for node in ast.walk(m.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = m.resolve_or_name(node.func) or ""
+        tail = fn.rsplit(".", 1)[-1]
+        if tail in ("Mesh", "make_mesh", "AbstractMesh"):
+            cands = list(node.args[1:2]) + [
+                kw.value for kw in node.keywords
+                if kw.arg in ("axis_names", None)]
+            for c in cands:
+                m.declared_axes.update(
+                    string_elements(c, m.str_constants))
+        # axis tuples declared as ElasticPlan(..., ("data", "model"), ...)
+        # are caught by the *_AXIS constant rule or stay variables; the
+        # project pass unions declarations across files.
+
+
+# ---------------------------------------------------------------------------
+# Region fixpoint
+# ---------------------------------------------------------------------------
+
+def _callable_bindings(m: ModuleInfo):
+    """(kind, bound FunctionInfo, enclosing FunctionInfo|None) for every
+    jit / control-flow / shard_map binding site in the module."""
+    out = []
+    # decorator seeds
+    for fi in m.functions.values():
+        node = fi.node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = m.resolve_or_name(target)
+            if is_jit_name(name):
+                out.append(("jit", fi, None))
+            elif (isinstance(dec, ast.Call) and is_partial_name(name)
+                  and dec.args and is_jit_name(
+                      m.resolve_or_name(dec.args[0]))):
+                out.append(("jit", fi, None))
+    # call-site bindings
+    for node in ast.walk(m.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = m.resolve_or_name(node.func)
+        encl = m.enclosing_function(node)
+        if is_jit_name(name) and node.args:
+            tgt = m.resolve_callable(node.args[0], encl)
+            if tgt is not None:
+                out.append(("jit", tgt, encl))
+        elif is_shard_map_name(name) and node.args:
+            tgt = m.resolve_callable(node.args[0], encl)
+            if tgt is not None:
+                out.append(("shard_map", tgt, encl))
+        elif name:
+            head, _, tail = name.rpartition(".")
+            if (tail in _CONTROL_FLOW_BINDERS
+                    and (head in _CONTROL_FLOW_MODULES or head == "jax")):
+                for idx in _CONTROL_FLOW_BINDERS[tail]:
+                    if idx < len(node.args):
+                        tgt = m.resolve_callable(node.args[idx], encl)
+                        if tgt is not None:
+                            out.append(("control_flow", tgt, encl))
+    return out
+
+
+def _call_edges(m: ModuleInfo):
+    """Module-local call graph: (caller FunctionInfo, callee
+    FunctionInfo).  A callee is any module-local function referenced
+    by a call's target OR bound into a ``functools.partial`` — either
+    way its body runs under the caller's tracing context.  Lexically
+    nested defs that are never referenced stay out (dead code)."""
+    edges = []
+    for fi in m.functions.values():
+        for n in walk_skipping_functions(fi.node):
+            if not isinstance(n, ast.Call):
+                continue
+            tgt = m.resolve_callable(n.func, fi)
+            if tgt is not None and tgt is not fi:
+                edges.append((fi, tgt))
+            name = m.resolve_or_name(n.func)
+            if is_partial_name(name) and n.args:
+                tgt = m.resolve_callable(n.args[0], fi)
+                if tgt is not None and tgt is not fi:
+                    edges.append((fi, tgt))
+    return edges
+
+
+def _region_fixpoint(m: ModuleInfo) -> None:
+    bindings = _callable_bindings(m)
+    edges = _call_edges(m)
+    changed = True
+    guard = 0
+    while changed and guard < 64:
+        changed = False
+        guard += 1
+        for kind, fi, encl in bindings:
+            sm = (kind == "shard_map") or (
+                encl is not None and encl.via_shard_map)
+            if not fi.in_region or (sm and not fi.via_shard_map):
+                fi.in_region = True
+                fi.via_shard_map = fi.via_shard_map or sm
+                fi.region_kinds.add(kind)
+                changed = True
+        for caller, callee in edges:
+            if caller.in_region and (
+                    not callee.in_region
+                    or (caller.via_shard_map and not callee.via_shard_map)):
+                callee.in_region = True
+                callee.via_shard_map = (callee.via_shard_map
+                                        or caller.via_shard_map)
+                callee.region_kinds |= caller.region_kinds
+                changed = True

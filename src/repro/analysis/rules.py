@@ -1,0 +1,496 @@
+"""The ranky-lint rule set: the repo's hot-path JAX discipline, written
+down as RL101–RL106.
+
+Every rule here encodes a regression class this repo has actually
+shipped-then-fixed (see ISSUE/ROADMAP history): per-ingest host syncs
+(RL101), PRNG chains losing a fold_in (RL102), collectives outside
+their shard_map region (RL103), accidental densification (RL104),
+retrace/recompile hazards (RL105), and unregistered pytree dataclasses
+crossing a jit boundary (RL106).
+
+Precision over recall: a rule stays silent when it cannot *prove* the
+pattern from the AST (variable axis names, cross-module calls, values
+of unknown provenance).  The fixture corpus under
+``tests/lint_fixtures/`` pins one true positive and one true negative
+per rule.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+from repro.analysis.core import Finding, Rule, register_rule
+from repro.analysis.regions import FunctionInfo, ModuleInfo, ProjectContext
+from repro.analysis.visitor import string_elements, walk_skipping_functions
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize", "nbytes"}
+_STATIC_FUNCS = {"len", "min", "max", "abs", "round", "sum", "divmod"}
+
+
+def _is_static_expr(node: ast.AST, fi: Optional[FunctionInfo],
+                    m: ModuleInfo, _depth: int = 0) -> bool:
+    """True when an expression provably has a host (non-traced) value:
+    constants, static jit params, shape/dtype arithmetic, len()."""
+    if _depth > 8:
+        return False
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        s = fi
+        while s is not None:
+            if node.id in s.static_params:
+                return True
+            s = s.scope_parent
+        if fi is not None and node.id in fi.assignments:
+            return _is_static_expr(fi.assignments[node.id], fi, m,
+                                   _depth + 1)
+        return False
+    if isinstance(node, ast.Attribute):
+        return node.attr in _STATIC_ATTRS
+    if isinstance(node, ast.Subscript):
+        return _is_static_expr(node.value, fi, m, _depth + 1)
+    if isinstance(node, (ast.BinOp, ast.UnaryOp, ast.BoolOp, ast.Compare,
+                         ast.Tuple, ast.List, ast.IfExp)):
+        return all(_is_static_expr(c, fi, m, _depth + 1)
+                   for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+    if isinstance(node, ast.Call):
+        name = m.resolve_or_name(node.func) or ""
+        if name in _STATIC_FUNCS or name.startswith("math."):
+            return all(_is_static_expr(a, fi, m, _depth + 1)
+                       for a in node.args)
+    return False
+
+
+def _region_functions(m: ModuleInfo) -> List[FunctionInfo]:
+    return [fi for fi in m.functions.values() if fi.in_region]
+
+
+# ---------------------------------------------------------------------------
+# RL101 — host sync inside a compiled region
+# ---------------------------------------------------------------------------
+
+_SYNC_CALLS = {"jax.device_get", "numpy.asarray", "numpy.array"}
+
+
+@register_rule
+class HostSyncInRegion(Rule):
+    id = "RL101"
+    name = "host-sync-in-region"
+    description = (".item()/float()/int()/np.asarray/jax.device_get "
+                   "reachable from a jit/scan/shard_map body — a device "
+                   "sync serializing the compiled hot path")
+
+    def check(self, m: ModuleInfo, project: ProjectContext
+              ) -> Iterator[Finding]:
+        for fi in _region_functions(m):
+            for node in walk_skipping_functions(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                hit = self._classify(node, fi, m)
+                if hit:
+                    yield self.finding(
+                        m, node,
+                        f"{hit} inside compiled region "
+                        f"'{fi.qualname}' forces a device->host sync; "
+                        f"keep values on device (counters in the carry, "
+                        f"one device_get after the dispatch)")
+
+    @staticmethod
+    def _classify(node: ast.Call, fi: FunctionInfo,
+                  m: ModuleInfo) -> Optional[str]:
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item" and not node.args):
+            return ".item()"
+        name = m.resolve_or_name(node.func)
+        if name in _SYNC_CALLS:
+            return name.replace("numpy.", "np.")
+        if name in ("float", "int") and len(node.args) == 1:
+            if not _is_static_expr(node.args[0], fi, m):
+                return f"{name}() on a traced value"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# RL102 — PRNG key reuse
+# ---------------------------------------------------------------------------
+
+_KEY_FACTORIES = {"PRNGKey", "key", "split", "fold_in", "wrap_key_data",
+                  "clone", "key_data", "key_impl"}
+
+
+def _consumer_tail(node: ast.Call, m: ModuleInfo) -> Optional[str]:
+    name = m.resolve_or_name(node.func) or ""
+    if not name.startswith("jax.random."):
+        return None
+    tail = name.rsplit(".", 1)[-1]
+    return None if tail in _KEY_FACTORIES else tail
+
+
+class _KeyFlow:
+    """Order-aware walker: counts, per local name, how many
+    ``jax.random.*`` sampler calls consumed it since its last
+    (re)assignment.  Loop bodies run twice so a key consumed across
+    iterations without an intervening split/fold_in is caught; branches
+    merge by max; returns/raises terminate their branch."""
+
+    def __init__(self, rule: Rule, fi: FunctionInfo, m: ModuleInfo):
+        self.rule, self.fi, self.m = rule, fi, m
+        self.findings: List[Finding] = []
+        self.counts: Dict[str, int] = {}
+        self.flagged: Set[int] = set()
+
+    # -- expressions ----------------------------------------------------
+    def use_expr(self, node: Optional[ast.AST]) -> None:
+        if node is None:
+            return
+        for n in _walk_expr(node):
+            if isinstance(n, ast.Call):
+                tail = _consumer_tail(n, self.m)
+                if (tail and n.args
+                        and isinstance(n.args[0], ast.Name)):
+                    key = n.args[0].id
+                    self.counts[key] = self.counts.get(key, 0) + 1
+                    if self.counts[key] >= 2 and id(n) not in self.flagged:
+                        self.flagged.add(id(n))
+                        self.findings.append(self.rule.finding(
+                            self.m, n,
+                            f"PRNG key '{key}' feeds jax.random.{tail} "
+                            f"after already being consumed — derive a "
+                            f"fresh key with jax.random.split/fold_in "
+                            f"between consumers"))
+
+    def reset(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.counts[target.id] = 0
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self.reset(el)
+        elif isinstance(target, ast.Starred):
+            self.reset(target.value)
+
+    # -- statements -----------------------------------------------------
+    def run(self, stmts: List[ast.stmt]) -> bool:
+        """Returns True when the block terminates (return/raise/...)."""
+        for st in stmts:
+            if isinstance(st, (ast.Return, ast.Raise)):
+                self.use_expr(getattr(st, "value", None)
+                              or getattr(st, "exc", None))
+                return True
+            if isinstance(st, (ast.Break, ast.Continue)):
+                return True
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue                      # separate analysis unit
+            if isinstance(st, ast.Assign):
+                self.use_expr(st.value)
+                for t in st.targets:
+                    self.reset(t)
+            elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+                self.use_expr(st.value)
+                self.reset(st.target)
+            elif isinstance(st, ast.If):
+                self.use_expr(st.test)
+                self._branch([st.body, st.orelse])
+            elif isinstance(st, (ast.For, ast.AsyncFor)):
+                self.use_expr(st.iter)
+                for _ in range(2):            # two passes: cross-iteration
+                    self.reset(st.target)
+                    saved = dict(self.counts)
+                    if self.run(st.body):
+                        self.counts = saved
+                        break
+                self.run(st.orelse)
+            elif isinstance(st, ast.While):
+                for _ in range(2):
+                    self.use_expr(st.test)
+                    saved = dict(self.counts)
+                    if self.run(st.body):
+                        self.counts = saved
+                        break
+                self.run(st.orelse)
+            elif isinstance(st, (ast.With, ast.AsyncWith)):
+                for item in st.items:
+                    self.use_expr(item.context_expr)
+                    if item.optional_vars is not None:
+                        self.reset(item.optional_vars)
+                if self.run(st.body):
+                    return True
+            elif isinstance(st, ast.Try):
+                if self.run(st.body):
+                    return True
+                self.run(st.finalbody)        # handlers: silence-biased
+            elif isinstance(st, ast.Expr):
+                self.use_expr(st.value)
+            elif isinstance(st, (ast.Delete, ast.Assert)):
+                for c in ast.iter_child_nodes(st):
+                    self.use_expr(c)
+        return False
+
+    def _branch(self, blocks: List[List[ast.stmt]]) -> None:
+        base = dict(self.counts)
+        merged: Dict[str, int] = dict(base)
+        for block in blocks:
+            self.counts = dict(base)
+            terminated = self.run(block)
+            if not terminated:
+                for k, v in self.counts.items():
+                    merged[k] = max(merged.get(k, 0), v)
+        self.counts = merged
+
+
+def _walk_expr(node: ast.AST) -> Iterator[ast.AST]:
+    """Walk an expression, skipping nested lambda/function bodies —
+    those are separate RL102 analysis units with their own key scope."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.Lambda, ast.FunctionDef,
+                          ast.AsyncFunctionDef)):
+            continue
+        yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+@register_rule
+class KeyReuse(Rule):
+    id = "RL102"
+    name = "prng-key-reuse"
+    description = ("one PRNG key consumed by two jax.random.* sampler "
+                   "calls with no split/fold_in between — correlated "
+                   "randomness, silently")
+
+    def check(self, m: ModuleInfo, project: ProjectContext
+              ) -> Iterator[Finding]:
+        for fi in m.functions.values():
+            node = fi.node
+            if isinstance(node, ast.Lambda):
+                continue                      # single-expression scope
+            flow = _KeyFlow(self, fi, m)
+            flow.run(node.body)
+            yield from flow.findings
+
+
+# ---------------------------------------------------------------------------
+# RL103 — collective-axis discipline
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = {"psum": 1, "pmean": 1, "pmax": 1, "pmin": 1,
+                "psum_scatter": 1, "all_gather": 1, "all_to_all": 1,
+                "ppermute": 1, "pshuffle": 1, "axis_index": 0}
+
+
+def _collective_tail(node: ast.Call, m: ModuleInfo) -> Optional[str]:
+    name = m.resolve_or_name(node.func) or ""
+    head, _, tail = name.rpartition(".")
+    if tail in _COLLECTIVES and head in ("jax.lax", "lax", "jax"):
+        return tail
+    return None
+
+
+@register_rule
+class CollectiveAxisDiscipline(Rule):
+    id = "RL103"
+    name = "collective-axis-discipline"
+    description = ("psum/pmean must name a declared mesh axis and must "
+                   "not run outside a shard_map body (unbound axis "
+                   "names fail at trace time, or worse, at scale)")
+
+    def check(self, m: ModuleInfo, project: ProjectContext
+              ) -> Iterator[Finding]:
+        for node in ast.walk(m.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = _collective_tail(node, m)
+            if tail is None:
+                continue
+            fi = m.enclosing_function(node)
+            if fi is not None and fi.in_region and not fi.via_shard_map:
+                yield self.finding(
+                    m, node,
+                    f"jax.lax.{tail} reachable from a jit/scan body "
+                    f"that is not inside any shard_map region — the "
+                    f"axis name is unbound there")
+            # literal axis names must be declared mesh axes somewhere in
+            # the analyzed tree (variable axes can't be checked — silent)
+            axis_arg = self._axis_arg(node, tail)
+            if axis_arg is None:
+                continue
+            declared = project.declared_axes
+            for ax in string_elements(axis_arg, m.str_constants):
+                if declared and ax not in declared:
+                    yield self.finding(
+                        m, node,
+                        f"jax.lax.{tail} names axis '{ax}' but the "
+                        f"analyzed tree declares only "
+                        f"{sorted(declared)} — collectives must name a "
+                        f"declared mesh axis")
+
+    @staticmethod
+    def _axis_arg(node: ast.Call, tail: str) -> Optional[ast.AST]:
+        idx = _COLLECTIVES[tail]
+        if len(node.args) > idx:
+            return node.args[idx]
+        for kw in node.keywords:
+            if kw.arg in ("axis_name", "axis"):
+                return kw.value
+        return None
+
+
+# ---------------------------------------------------------------------------
+# RL104 — no densify
+# ---------------------------------------------------------------------------
+
+_DENSIFY_METHODS = {"todense", "toarray"}
+
+
+@register_rule
+class NoDensify(Rule):
+    id = "RL104"
+    name = "no-densify"
+    description = (".todense() outside whitelisted oracle/test sites — "
+                   "the sparse path must never materialize the matrix")
+
+    def check(self, m: ModuleInfo, project: ProjectContext
+              ) -> Iterator[Finding]:
+        # test trees are oracle territory by construction: a 'tests'
+        # directory component, or a test_*/conftest.py file name
+        parts = m.path.replace("\\", "/").split("/")
+        name = parts[-1]
+        if ("tests" in parts[:-1] or name.startswith("test_")
+                or name == "conftest.py"):
+            return
+        for node in ast.walk(m.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _DENSIFY_METHODS):
+                yield self.finding(
+                    m, node,
+                    f".{node.func.attr}() densifies a sparse container "
+                    f"outside a whitelisted oracle/test site; keep the "
+                    f"sparse-native path (or mark an oracle site with "
+                    f"'# ranky-lint: disable=RL104')")
+
+
+# ---------------------------------------------------------------------------
+# RL105 — recompile hazard
+# ---------------------------------------------------------------------------
+
+_TRACED_PREFIXES = ("jax.numpy.", "jax.lax.", "jax.random.", "jax.nn.",
+                    "jax.scipy.")
+_TRACED_METHODS = {"any", "all", "sum", "max", "min", "mean", "prod",
+                   "argmax", "argmin", "astype"}
+
+
+def _test_on_traced(test: ast.AST, m: ModuleInfo) -> Optional[str]:
+    for n in ast.walk(test):
+        if not isinstance(n, ast.Call):
+            continue
+        name = m.resolve_or_name(n.func) or ""
+        if name.startswith(_TRACED_PREFIXES):
+            return name
+        if (isinstance(n.func, ast.Attribute)
+                and n.func.attr in _TRACED_METHODS
+                and m.resolve(n.func) is None):
+            return f".{n.func.attr}()"
+    return None
+
+
+@register_rule
+class RecompileHazard(Rule):
+    id = "RL105"
+    name = "recompile-hazard"
+    description = ("Python branching on traced values inside a compiled "
+                   "region, or unhashable static args — each one is a "
+                   "TracerBoolConversionError or a silent retrace")
+
+    def check(self, m: ModuleInfo, project: ProjectContext
+              ) -> Iterator[Finding]:
+        for fi in _region_functions(m):
+            for node in walk_skipping_functions(fi.node):
+                test = None
+                if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                    test = node.test
+                elif isinstance(node, ast.Assert):
+                    test = node.test
+                if test is None:
+                    continue
+                hit = _test_on_traced(test, m)
+                if hit:
+                    yield self.finding(
+                        m, node,
+                        f"Python branch on a traced value ({hit}) inside "
+                        f"compiled region '{fi.qualname}' — use jnp.where "
+                        f"/ lax.cond, or hoist the decision to the host")
+        yield from self._unhashable_static(m)
+
+    def _unhashable_static(self, m: ModuleInfo) -> Iterator[Finding]:
+        for fi in m.functions.values():
+            node = fi.node
+            if isinstance(node, ast.Lambda) or not fi.static_params:
+                continue
+            args = node.args
+            pos = args.posonlyargs + args.args
+            defaults = args.defaults
+            pairs = list(zip(pos[len(pos) - len(defaults):], defaults))
+            pairs += [(a, d) for a, d in zip(args.kwonlyargs,
+                                             args.kw_defaults or [])
+                      if d is not None]
+            for param, default in pairs:
+                if (param.arg in fi.static_params
+                        and isinstance(default, (ast.List, ast.Dict,
+                                                 ast.Set))):
+                    yield self.finding(
+                        m, default,
+                        f"static arg '{param.arg}' of jitted "
+                        f"'{fi.qualname}' defaults to an unhashable "
+                        f"{type(default).__name__.lower()} — jit static "
+                        f"args must be hashable (use a tuple)")
+
+
+# ---------------------------------------------------------------------------
+# RL106 — pytree completeness
+# ---------------------------------------------------------------------------
+
+@register_rule
+class PytreeCompleteness(Rule):
+    id = "RL106"
+    name = "pytree-completeness"
+    description = ("dataclasses crossing a jit boundary must be "
+                   "registered pytrees (and thereby checkpoint-markable "
+                   "via checkpoint/ckpt.py's marker-leaf round-trip)")
+
+    def check(self, m: ModuleInfo, project: ProjectContext
+              ) -> Iterator[Finding]:
+        for fi in _region_functions(m):
+            for node in walk_skipping_functions(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                tail = self._class_tail(node.func)
+                if tail is None or tail not in project.dataclasses:
+                    continue
+                cd, owner = project.dataclasses[tail]
+                if cd.is_registered:
+                    continue
+                yield self.finding(
+                    m, node,
+                    f"dataclass '{tail}' is constructed inside compiled "
+                    f"region '{fi.qualname}' but is not a registered "
+                    f"pytree — decorate it with "
+                    f"@jax.tree_util.register_pytree_node_class (which "
+                    f"also makes it checkpoint-markable through "
+                    f"checkpoint/ckpt.py) [defined in {owner.path}]")
+
+    @staticmethod
+    def _class_tail(func: ast.AST) -> Optional[str]:
+        if isinstance(func, ast.Name):
+            name = func.id
+        elif isinstance(func, ast.Attribute):
+            name = func.attr
+        else:
+            return None
+        return name if name[:1].isupper() else None

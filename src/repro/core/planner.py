@@ -31,6 +31,9 @@ tests/test_api.py against hand-computed values):
   BATCH factorization (``exact_bytes`` of the batch spec, M = batch
   rows, or ``sketch_bytes`` evaluated at the rank the batch sketch
   actually runs — ``l_b``, internal width ``min(l_b + p, m)``) plus
+  ``stream_repair_bytes`` = ``4 * 2 * m * N_pad`` for the
+  split-and-repair transient (the split block view and the repaired
+  copy) plus
   ``stream_merge_bytes`` = ``4 * 2 * N_pad * (k + l_b)`` for the
   (N_pad, k + l_b) merge panel and its SVD workspace, with
   ``l_b = min(k + oversample, batch_m)``.  The closed form covers the
@@ -49,7 +52,10 @@ tests/test_api.py against hand-computed values):
   Gram.  Per-device peak = batch term (``4 * m^2`` exact — one local
   gram + the psum buffer, same count as ``shard_map_bytes`` — or
   ``4 * (L*W + 2*m*L)`` sketch, the R3 per-device sketch without the D
-  factor) + ``stream_merge_bytes_per_device`` = ``4 * 2 * W *
+  factor) + ``stream_repair_bytes_per_device`` = ``4 * 2 * (m*W +
+  m^2)`` for the per-device repair transient (nonzero mask + repaired
+  block + the psum'd adjacency pair)
+  + ``stream_merge_bytes_per_device`` = ``4 * 2 * W *
   (k + l_b)`` for the per-device panel slice and its output shard.  No
   device ever materializes the (N_pad, k + l_b) panel, and the form
   keeps R5's guarantee: independent of the rows already ingested.
@@ -155,6 +161,24 @@ def stream_panel_width(rank: int, oversample: int, batch_m: int) -> int:
     return min(rank + oversample, batch_m)
 
 
+def stream_repair_bytes(batch: ASpec) -> int:
+    """R5 repair transient: ``split_and_repair`` materializes the split
+    (D, m, W) block view and the repaired copy before the masked blocks
+    reach the factorization — two batch-sized temporaries, live at the
+    same time as neither the gram stack nor the merge panel, but big
+    enough to set the peak for wide batches.  (Surfaced by the
+    memory_checker harness: the measured compiled peak sat at ~2.2x the
+    un-repaired closed form.)"""
+    return BYTES_F32 * 2 * batch.m * batch.num_blocks * batch.width
+
+
+def stream_repair_bytes_per_device(batch: ASpec) -> int:
+    """R5d repair transient per device: the (m, W) nonzero mask plus
+    the repaired block copy, and the two (m, m) buffers of the psum'd
+    global adjacency."""
+    return BYTES_F32 * 2 * (batch.m * batch.width + batch.m * batch.m)
+
+
 def stream_merge_bytes(batch: ASpec, rank: int, oversample: int, *,
                        batch_rank: Optional[int] = None) -> int:
     """R5 merge term: the (N_pad, k + r_b) stacked panel
@@ -184,8 +208,9 @@ def streaming_bytes_per_device(batch: ASpec, rank: int, oversample: int, *,
     factorization (exact: one local (m, m) gram + the psum buffer, the
     same ``4 m^2`` count as ``shard_map_bytes``; sketch: the per-device
     (L, W) block sketch + (L, m) pullback / (m, L) QR workspace — the R3
-    shard_map sketch peak, no D factor) + the per-device merge slice.
-    Independent of the rows already ingested, like R5."""
+    shard_map sketch peak, no D factor) + the per-device repair
+    transient + the per-device merge slice.  Independent of the rows
+    already ingested, like R5."""
     r_b = (stream_panel_width(rank, oversample, batch.m)
            if batch_rank is None else min(batch_rank, batch.m))
     if exact:
@@ -193,15 +218,17 @@ def streaming_bytes_per_device(batch: ASpec, rank: int, oversample: int, *,
     else:
         l = sketch_width(r_b, oversample, batch.m)
         base = BYTES_F32 * (l * batch.width + 2 * batch.m * l)
-    return base + stream_merge_bytes_per_device(batch, rank, oversample,
-                                                batch_rank=batch_rank)
+    return (base + stream_repair_bytes_per_device(batch)
+            + stream_merge_bytes_per_device(batch, rank, oversample,
+                                            batch_rank=batch_rank))
 
 
 def streaming_bytes(batch: ASpec, rank: int, oversample: int, *,
                     exact: bool, batch_rank: Optional[int] = None) -> int:
     """R5 total: one ``svd_update`` peak = batch factorization (exact
     gram stack or randomized sketch of the BATCH — ``batch.m`` is the
-    batch row count, not the rows seen) + the merge panel.
+    batch row count, not the rows seen) + the split-and-repair
+    transient + the merge panel.
 
     The batch keeps ``r_b`` directions through the merge — ``l_b`` by
     default, or an explicitly forced ``batch_rank`` — so the sketch
@@ -213,8 +240,9 @@ def streaming_bytes(batch: ASpec, rank: int, oversample: int, *,
            if batch_rank is None else min(batch_rank, batch.m))
     base = (exact_bytes(batch) if exact
             else sketch_bytes(batch, r_b, oversample))
-    return base + stream_merge_bytes(batch, rank, oversample,
-                                     batch_rank=batch_rank)
+    return (base + stream_repair_bytes(batch)
+            + stream_merge_bytes(batch, rank, oversample,
+                                 batch_rank=batch_rank))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,7 +21,9 @@ def paper_coo(cfg: RankyPaperConfig) -> sparse.COOMatrix:
 
 
 def paper_matrix(cfg: RankyPaperConfig) -> np.ndarray:
-    return paper_coo(cfg).todense()
+    # Whitelisted densify: the dense copy exists only as the exactness
+    # oracle for tests/benchmarks, never on the solve path.
+    return paper_coo(cfg).todense()  # ranky-lint: disable=RL104
 
 
 def paper_block_ell(cfg: RankyPaperConfig, num_blocks: int) -> sparse.BlockEll:

@@ -21,10 +21,18 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence, Tuple
 
+import numpy as np
+
 import jax
 from jax.sharding import Mesh
 
 from repro.models.layers import ShardCtx
+
+# Canonical elastic mesh axes.  Declared as *_AXIS module constants so
+# ranky-lint RL103 knows any collective naming them is legal.
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,15 +63,20 @@ def plan_mesh(num_devices: int, *, model_parallel: int = 16,
     dp = num_devices // mp
     used = dp * mp
     if used >= multi_pod_threshold and dp % 2 == 0:
-        return ElasticPlan((2, dp // 2, mp), ("pod", "data", "model"),
+        return ElasticPlan((2, dp // 2, mp),
+                           (POD_AXIS, DATA_AXIS, MODEL_AXIS),
                            num_devices - used)
-    return ElasticPlan((dp, mp), ("data", "model"), num_devices - used)
+    return ElasticPlan((dp, mp), (DATA_AXIS, MODEL_AXIS),
+                       num_devices - used)
 
 
 def build_mesh(plan: ElasticPlan, devices: Optional[Sequence] = None) -> Mesh:
     devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < plan.num_devices:
+        raise ValueError(
+            f"plan needs {plan.num_devices} devices, got {len(devices)} "
+            f"— re-plan with plan_mesh(len(survivors))")
     devices = devices[: plan.num_devices]
-    import numpy as np
     return Mesh(np.asarray(devices).reshape(plan.shape), plan.axis_names)
 
 

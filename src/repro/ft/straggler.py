@@ -38,13 +38,21 @@ class StragglerMonitor:
         """Feed one step's per-host wall times.  Returns the current
         flagged / evict-recommended host lists."""
         for h, t in step_times.items():
+            if not 0 <= h < self.num_hosts:
+                raise ValueError(
+                    f"host id {h} outside [0, {self.num_hosts})")
             prev = self.ewma[h]
             self.ewma[h] = t if prev is None else \
                 (1 - self.cfg.alpha) * prev + self.cfg.alpha * t
         known = sorted(e for e in self.ewma if e is not None)
         if not known:
             return {"flagged": [], "evict": []}
-        median = known[len(known) // 2]
+        mid = len(known) // 2
+        # true median: with an even host count the upper-middle value
+        # would let one slow host of two drag the threshold up past
+        # itself and never get flagged
+        median = known[mid] if len(known) % 2 else \
+            0.5 * (known[mid - 1] + known[mid])
         flagged = []
         for h, e in enumerate(self.ewma):
             if e is not None and e > self.cfg.threshold * median:

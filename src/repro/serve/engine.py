@@ -62,12 +62,18 @@ def prefill_cache(cfg: ModelConfig, params, prompts: jnp.ndarray,
 
 
 def generate(cfg: ModelConfig, params, prompts: jnp.ndarray,
-             ctx: ShardCtx, scfg: ServeConfig, num_tokens: int
-             ) -> jnp.ndarray:
-    """Greedy/temperature generation.  prompts (B, P) -> (B, num_tokens)."""
+             ctx: ShardCtx, scfg: ServeConfig, num_tokens: int,
+             key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Greedy/temperature generation.  prompts (B, P) -> (B, num_tokens).
+
+    Pass ``key`` to thread an explicit PRNG stream; callers serving many
+    requests must split their own key per request, otherwise every call
+    with the same ServeConfig replays the identical sampling noise (the
+    seed-derived fallback exists for one-shot/test use)."""
     b = prompts.shape[0]
     cache, logits = prefill_cache(cfg, params, prompts, ctx, scfg)
-    key = jax.random.PRNGKey(scfg.seed)
+    if key is None:
+        key = jax.random.PRNGKey(scfg.seed)
 
     def sample(logits, key):
         logits = logits[..., : cfg.vocab_size]
@@ -94,6 +100,8 @@ def generate(cfg: ModelConfig, params, prompts: jnp.ndarray,
 def batch_requests(prompt_lists: List[List[int]], pad_id: int = 0
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """Left-pad uneven requests into one batch (B, Pmax) + lengths."""
+    if not prompt_lists:
+        raise ValueError("batch_requests needs at least one prompt")
     lens = np.asarray([len(p) for p in prompt_lists])
     pmax = int(lens.max())
     out = np.full((len(prompt_lists), pmax), pad_id, np.int32)

@@ -1,0 +1,22 @@
+"""RL101 true positive: host syncs reachable from a scan body through
+the repo's functools.partial step idiom."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _step(cfg, carry, x):
+    total = carry + x.sum()
+    trace = float(total)            # RL101: float() on a traced value
+    host = np.asarray(x)            # RL101: np.asarray inside the region
+    return total, trace + host.sum()
+
+
+@jax.jit
+def run(xs):
+    step = functools.partial(_step, {"d": 4})
+    carry, ys = jax.lax.scan(step, jnp.float32(0.0), xs)
+    probe = jax.device_get(carry)   # RL101: device_get inside jit
+    return carry.item(), ys, probe  # RL101: .item() inside jit

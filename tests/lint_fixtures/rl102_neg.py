@@ -1,0 +1,34 @@
+"""RL102 true negative: split/fold_in chains, reassignment in loops,
+and consumers in mutually-exclusive return branches."""
+import jax
+
+
+def init(key, shape):
+    kw, kb = jax.random.split(key)
+    w = jax.random.normal(kw, shape)
+    b = jax.random.uniform(kb, shape)
+    return w, b
+
+
+def rollout(key, steps):
+    outs = []
+    for i in range(steps):
+        k = jax.random.fold_in(key, i)
+        outs.append(jax.random.normal(k, (4,)))
+    return outs
+
+
+def advance(key, steps):
+    outs = []
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        outs.append(jax.random.normal(sub, (4,)))
+    return outs
+
+
+def pick(key, kind, shape):
+    if kind == "normal":
+        return jax.random.normal(key, shape)
+    if kind == "uniform":
+        return jax.random.uniform(key, shape)
+    return jax.random.bernoulli(key, 0.5, shape)

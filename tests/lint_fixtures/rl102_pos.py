@@ -1,0 +1,16 @@
+"""RL102 true positive: one key feeding two samplers, straight-line and
+across loop iterations."""
+import jax
+
+
+def init(key, shape):
+    w = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)      # RL102: key consumed twice
+    return w, b
+
+
+def rollout(key, steps):
+    outs = []
+    for _ in range(steps):
+        outs.append(jax.random.normal(key, (4,)))   # RL102: reused
+    return outs

@@ -1,0 +1,28 @@
+"""RL103 true negative: collectives inside shard_map bodies naming the
+declared axis (including via the *_AXIS constant idiom), plus an
+un-regioned helper that merely mentions psum."""
+import jax
+from jax.sharding import Mesh
+from jax.experimental.shard_map import shard_map
+
+STREAM_AXIS = "blocks"
+
+
+def build_mesh(devices):
+    return Mesh(devices, (STREAM_AXIS,))
+
+
+def _inner(x):
+    total = jax.lax.psum(x, STREAM_AXIS)
+    idx = jax.lax.axis_index(STREAM_AXIS)
+    return total, idx
+
+
+def launch(mesh, x, specs):
+    return shard_map(_inner, mesh=mesh, in_specs=specs,
+                     out_specs=specs)(x)
+
+
+def axis_size_helper(ax):
+    # host helper, never traced: stays silent by design
+    return jax.lax.psum(1, ax)

@@ -1,0 +1,23 @@
+"""RL103 true positive: a collective in a jit region with no shard_map
+in its call chain, and a collective naming an undeclared axis."""
+import jax
+from jax.sharding import Mesh
+from jax.experimental.shard_map import shard_map
+
+
+def build_mesh(devices):
+    return Mesh(devices, ("blocks",))
+
+
+@jax.jit
+def bad_reduce(x):
+    return jax.lax.psum(x, "blocks")      # RL103: jit body, no shard_map
+
+
+def _inner(x):
+    return jax.lax.pmean(x, "block")      # RL103: axis 'block' undeclared
+
+
+def launch(mesh, x, specs):
+    return shard_map(_inner, mesh=mesh, in_specs=specs,
+                     out_specs=specs)(x)

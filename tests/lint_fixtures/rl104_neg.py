@@ -1,0 +1,12 @@
+"""RL104 true negative: the sparse-native path never materializes the
+matrix — grams via sparse matvecs, no todense anywhere."""
+import jax.numpy as jnp
+
+
+def gram_vec(coo_matvec, v):
+    return coo_matvec(coo_matvec(v))
+
+
+def panel(coo_matvec, omega):
+    return jnp.stack([coo_matvec(omega[:, j])
+                      for j in range(omega.shape[1])], axis=1)

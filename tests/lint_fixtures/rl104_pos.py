@@ -1,0 +1,12 @@
+"""RL104 true positive: densifying a sparse container on the library
+path (this fixture is analyzed under a src-like synthetic path)."""
+import jax.numpy as jnp
+
+
+def gram(coo):
+    dense = coo.todense()           # RL104: densify outside oracle/test
+    return dense.T @ dense
+
+
+def export(csr):
+    return csr.toarray()            # RL104: same, scipy spelling

@@ -1,0 +1,27 @@
+"""RL105 true negative: data-dependent selection via lax.cond/jnp.where
+and host branching on static (shape / static-arg) values only."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clip_if_large(x):
+    big = jnp.any(jnp.abs(x) > 10.0)
+    return jax.lax.cond(big, lambda v: jnp.clip(v, -10.0, 10.0),
+                        lambda v: v, x)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def normalize(x, mode="l2"):
+    if mode == "l2":                    # static-arg branch: retraces by
+        return x / jnp.linalg.norm(x)   # design, once per mode
+    if x.shape[0] > 1:                  # shape branch: static
+        return x / x.shape[0]
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("dims",))
+def reduce_over(x, dims=(0, 1)):        # hashable tuple default
+    return x.sum()

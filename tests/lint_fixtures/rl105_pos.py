@@ -1,0 +1,18 @@
+"""RL105 true positive: Python branching on a traced value inside jit,
+and an unhashable default for a static arg."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clip_if_large(x):
+    if jnp.any(jnp.abs(x) > 10.0):      # RL105: branch on traced value
+        return jnp.clip(x, -10.0, 10.0)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("dims",))
+def reduce_over(x, dims=[0, 1]):        # RL105: unhashable static default
+    return x.sum()

@@ -1,0 +1,27 @@
+"""RL106 true negative: the repo's registered-pytree dataclass idiom —
+register_pytree_node_class with tree_flatten/tree_unflatten."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SketchState:
+    u: jnp.ndarray
+    s: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.u, self.s), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+@jax.jit
+def step(x):
+    u, s, _ = jnp.linalg.svd(x, full_matrices=False)
+    return SketchState(u=u, s=s)

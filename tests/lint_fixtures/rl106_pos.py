@@ -1,0 +1,19 @@
+"""RL106 true positive: an unregistered dataclass with array fields is
+constructed inside a jit region — jit would reject it (or flatten it
+wrongly), and checkpoint/ckpt.py could not mark it."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchState:
+    u: jnp.ndarray
+    s: jnp.ndarray
+
+
+@jax.jit
+def step(x):
+    u, s, _ = jnp.linalg.svd(x, full_matrices=False)
+    return SketchState(u=u, s=s)        # RL106: not a registered pytree

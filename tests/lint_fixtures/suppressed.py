@@ -1,0 +1,21 @@
+"""Suppression round-trip fixture: every finding below is silenced by
+an inline or file-level directive; removing the comments must bring the
+findings back (the test does exactly that)."""
+import jax
+import jax.numpy as jnp
+
+
+def oracle_gram(coo):
+    dense = coo.todense()  # ranky-lint: disable=RL104
+    return dense.T @ dense
+
+
+def init(key, shape):
+    w = jax.random.normal(key, shape)
+    b = jax.random.uniform(key, shape)  # ranky-lint: disable=RL102
+    return w, b
+
+
+@jax.jit
+def probe(x):
+    return float(x.sum())  # ranky-lint: disable=RL101,RL105

@@ -1,0 +1,226 @@
+"""Tests for ranky-lint (src/repro/analysis): per-rule true
+positives/negatives from the fixture corpus, the suppression
+round-trip, the window.py host-sync mutation regression, and the
+sweep-clean guarantee over src/repro."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import all_rules, analyze_paths, analyze_sources
+from repro.analysis.report import render_json, render_text
+from repro.analysis.suppress import collect_suppressions
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "lint_fixtures")
+REPO = os.path.dirname(HERE)
+RULE_IDS = ("RL101", "RL102", "RL103", "RL104", "RL105", "RL106")
+
+
+def _fixture(name):
+    with open(os.path.join(FIXTURES, name), "r", encoding="utf-8") as fh:
+        return fh.read()
+
+
+def _analyze_fixture(name, path=None):
+    # Synthetic src-like paths keep RL104's tests/-whitelist out of the
+    # way; the whitelist itself is exercised explicitly below.
+    return analyze_sources([(path or f"src/fixtures/{name}",
+                             _fixture(name))])
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_contracted_rules():
+    ids = [r.id for r in all_rules()]
+    assert list(RULE_IDS) == ids
+
+
+@pytest.mark.parametrize("rule_id", RULE_IDS)
+def test_rule_true_positive(rule_id):
+    result = _analyze_fixture(f"{rule_id.lower()}_pos.py")
+    hits = [f for f in result.findings if f.rule == rule_id]
+    assert hits, f"{rule_id} did not fire on its positive fixture"
+
+
+@pytest.mark.parametrize("rule_id", RULE_IDS)
+def test_rule_true_negative(rule_id):
+    result = _analyze_fixture(f"{rule_id.lower()}_neg.py")
+    hits = [f for f in result.findings if f.rule == rule_id]
+    assert not hits, (f"{rule_id} false-positived on its negative "
+                      f"fixture: {[f.render() for f in hits]}")
+
+
+def test_rl101_positive_catches_every_sync_kind():
+    result = _analyze_fixture("rl101_pos.py")
+    msgs = " ".join(f.message for f in result.findings
+                    if f.rule == "RL101")
+    for kind in (".item()", "float()", "np.asarray", "jax.device_get"):
+        assert kind in msgs, f"RL101 missed {kind}"
+
+
+def test_rl103_distinguishes_region_and_axis_errors():
+    result = _analyze_fixture("rl103_pos.py")
+    msgs = [f.message for f in result.findings if f.rule == "RL103"]
+    assert any("not inside any shard_map" in m for m in msgs)
+    assert any("declares only" in m for m in msgs)
+
+
+def test_rl104_whitelists_test_paths():
+    # The same densifying source is legal when it lives under tests/
+    result = _analyze_fixture("rl104_pos.py",
+                              path="tests/test_oracle.py")
+    assert not [f for f in result.findings if f.rule == "RL104"]
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_suppression_round_trip():
+    src = _fixture("suppressed.py")
+    clean = analyze_sources([("src/fixtures/suppressed.py", src)])
+    assert clean.findings == [], [f.render() for f in clean.findings]
+
+    # strip the directives -> every silenced finding comes back
+    stripped = "\n".join(line.split("# ranky-lint:")[0].rstrip()
+                         for line in src.splitlines())
+    dirty = analyze_sources([("src/fixtures/suppressed.py", stripped)])
+    fired = {f.rule for f in dirty.findings}
+    assert {"RL104", "RL102", "RL101"} <= fired, fired
+
+
+def test_file_level_suppression():
+    src = ("# ranky-lint: disable-file=RL104\n"
+           "def gram(coo):\n"
+           "    return coo.todense()\n")
+    result = analyze_sources([("src/fixtures/file_sup.py", src)])
+    assert result.findings == []
+
+
+def test_directive_in_string_literal_is_inert():
+    src = ('DOC = "# ranky-lint: disable-file=RL104"\n'
+           "def gram(coo):\n"
+           "    return coo.todense()\n")
+    result = analyze_sources([("src/fixtures/str_sup.py", src)])
+    assert [f.rule for f in result.findings] == ["RL104"]
+
+
+def test_collect_suppressions_parses_lists():
+    sup = collect_suppressions(
+        "x = 1  # ranky-lint: disable=RL101, RL105\n")
+    assert sup.is_suppressed("RL101", 1)
+    assert sup.is_suppressed("RL105", 1)
+    assert not sup.is_suppressed("RL104", 1)
+    assert not sup.is_suppressed("RL101", 2)
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rel", [
+    "ft/elastic.py", "ft/straggler.py", "serve/engine.py",
+])
+def test_seed_scaffolding_is_lint_clean(rel):
+    """The serving/elastic ROADMAP items build on these files; keep
+    them at zero findings so they start from a clean discipline."""
+    path = os.path.join(REPO, "src", "repro", rel)
+    result = analyze_paths([path])
+    assert result.findings == [], "\n".join(
+        f.render() for f in result.findings)
+
+
+def test_src_repro_sweep_is_clean():
+    result = analyze_paths([os.path.join(REPO, "src", "repro")])
+    assert result.errors == []
+    assert result.findings == [], "\n".join(
+        f.render() for f in result.findings)
+
+
+def _window_source():
+    with open(os.path.join(REPO, "src", "repro", "stream", "window.py"),
+              "r", encoding="utf-8") as fh:
+        return fh.read()
+
+
+@pytest.mark.parametrize("inject, expect", [
+    ("    _ = jax.device_get(s_new)\n", "jax.device_get"),
+    ("    _ = float(s_new[0])\n", "float()"),
+])
+def test_rl101_mutation_regression_window(inject, expect):
+    """Deleting the PR 6 host-sync fix (one device_get AFTER the scan)
+    by reintroducing a per-step sync must trip RL101."""
+    src = _window_source()
+    anchor = "    return carry, (uk, u_b, lonely_pb)"
+    assert anchor in src
+    mutated = src.replace(anchor, inject + anchor, 1)
+    result = analyze_sources([("src/repro/stream/window.py", mutated)])
+    hits = [f for f in result.findings if f.rule == "RL101"]
+    assert hits and any(expect in f.message for f in hits)
+    assert all("_step_single" in f.message for f in hits)
+
+
+def test_window_scan_steps_are_in_region():
+    from repro.analysis.regions import build_module
+    m = build_module("window.py", _window_source())
+    flags = {fi.qualname: fi.via_shard_map
+             for fi in m.functions.values() if fi.in_region}
+    assert "_step_single" in flags and flags["_step_single"] is False
+    assert "_step_sharded" in flags and flags["_step_sharded"] is True
+
+
+# ---------------------------------------------------------------------------
+# reporters + CLI
+# ---------------------------------------------------------------------------
+
+def test_json_report_schema():
+    result = _analyze_fixture("rl104_pos.py")
+    payload = json.loads(render_json(result.findings,
+                                     result.files_analyzed))
+    assert payload["tool"] == "ranky-lint"
+    assert payload["schema_version"] == 1
+    assert payload["counts"]["RL104"] == len(result.findings)
+    assert all(set(f) == {"rule", "path", "line", "col", "message"}
+               for f in payload["findings"])
+
+
+def test_text_report_mentions_counts():
+    result = _analyze_fixture("rl104_pos.py")
+    text = render_text(result.findings, result.files_analyzed)
+    assert "RL104" in text and "finding(s)" in text
+
+
+def _run_cli(*argv):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "ranky_lint.py"),
+         *argv],
+        capture_output=True, text=True, cwd=REPO)
+
+
+def test_cli_list_rules():
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for rid in RULE_IDS:
+        assert rid in proc.stdout
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def gram(coo):\n    return coo.todense()\n")
+    good = tmp_path / "good.py"
+    good.write_text("def gram(mv, v):\n    return mv(mv(v))\n")
+
+    assert _run_cli(str(good)).returncode == 0
+    proc = _run_cli(str(bad))
+    assert proc.returncode == 1 and "RL104" in proc.stdout
+
+    out = tmp_path / "report.json"
+    proc = _run_cli("--format", "json", "--out", str(out), str(bad))
+    assert proc.returncode == 1
+    payload = json.loads(out.read_text())
+    assert payload["counts"] == {"RL104": 1}

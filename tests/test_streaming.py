@@ -154,19 +154,21 @@ def test_r5_byte_estimates_hand_computed():
     assert planner.stream_panel_width(16, 8, 10) == 10
     # merge: 4 * 2 * 4096 * (16 + 24) = 1_310_720
     assert planner.stream_merge_bytes(BATCH_SPEC, 16, 8) == 1_310_720
+    # repair transient: 4 * 2 * 64 * 4096 = 2_097_152
+    assert planner.stream_repair_bytes(BATCH_SPEC) == 2_097_152
     # exact batch term: 4 * 8 * 64 * 64 = 131_072
     assert planner.streaming_bytes(BATCH_SPEC, 16, 8, exact=True) == \
-        131_072 + 1_310_720
+        131_072 + 2_097_152 + 1_310_720
     # sketch batch term at the rank the engine actually runs (r_b = l_b
     # = 24, internal width L = min(24 + 8, 64) = 32):
     # 4 * (8*32*512 + 2*64*32) = 540_672
     assert planner.streaming_bytes(BATCH_SPEC, 16, 8, exact=False) == \
-        540_672 + 1_310_720
+        540_672 + 2_097_152 + 1_310_720
     # explicitly forced batch rank 12: L = min(12 + 8, 64) = 20, merge
     # panel (N_pad, 16 + 12): 4*(8*20*512 + 2*64*20) + 4*2*4096*28
     assert planner.streaming_bytes(BATCH_SPEC, 16, 8, exact=False,
                                    batch_rank=12) == \
-        4 * (8 * 20 * 512 + 2 * 64 * 20) + 4 * 2 * 4096 * 28
+        4 * (8 * 20 * 512 + 2 * 64 * 20) + 2_097_152 + 4 * 2 * 4096 * 28
 
 
 def test_r5_peak_independent_of_rows_seen():
@@ -177,7 +179,7 @@ def test_r5_peak_independent_of_rows_seen():
     assert p.strategy == "streaming"
     assert p.backend == "single"
     assert p.rank is None  # exact batch factorization fits comfortably
-    assert p.peak_bytes == 131_072 + 1_310_720
+    assert p.peak_bytes == 131_072 + 2_097_152 + 1_310_720
     assert "independent of rows already ingested" in " ".join(p.reasons)
 
 
@@ -519,21 +521,24 @@ def test_r5d_byte_estimates_hand_computed():
     # merge slice per device: 4 * 2 * 512 * (16 + 24) = 163_840
     assert planner.stream_merge_bytes_per_device(BATCH_SPEC, 16, 8) == \
         163_840
+    # per-device repair transient: 4 * 2 * (64*512 + 64*64) = 294_912
+    assert planner.stream_repair_bytes_per_device(BATCH_SPEC) == 294_912
     # exact batch term per device (local gram + psum buffer):
     # 4 * 64 * 64 = 16_384
     assert planner.streaming_bytes_per_device(BATCH_SPEC, 16, 8,
                                               exact=True) == \
-        16_384 + 163_840
+        16_384 + 294_912 + 163_840
     # sketch per device at the rank the engine runs (r_b = l_b = 24,
     # internal width L = min(24 + 8, 64) = 32):
     # 4 * (32*512 + 2*64*32) = 81_920
     assert planner.streaming_bytes_per_device(BATCH_SPEC, 16, 8,
                                               exact=False) == \
-        81_920 + 163_840
+        81_920 + 294_912 + 163_840
     # explicitly forced batch rank 12: L = min(12 + 8, 64) = 20 ->
     # 4*(20*512 + 2*64*20) = 51_200; merge 4*2*512*(16+12) = 114_688
     assert planner.streaming_bytes_per_device(
-        BATCH_SPEC, 16, 8, exact=False, batch_rank=12) == 51_200 + 114_688
+        BATCH_SPEC, 16, 8, exact=False, batch_rank=12) == \
+        51_200 + 294_912 + 114_688
 
 
 def test_r5d_backend_selection_and_honest_degrade():
@@ -541,7 +546,7 @@ def test_r5d_backend_selection_and_honest_degrade():
     p = planner.make_stream_plan(BATCH_SPEC, cfg, device_count=8)
     assert p.backend == "shard_map" and p.strategy == "streaming"
     assert p.rank is None  # exact batch factorization fits per device
-    assert p.peak_bytes == 16_384 + 163_840
+    assert p.peak_bytes == 16_384 + 294_912 + 163_840
     assert p.estimates["stream_exact_per_device"] == p.peak_bytes
     assert "independent of rows already ingested" in " ".join(p.reasons)
     # shard_map requested but one-block-per-device impossible: degrade
@@ -549,7 +554,7 @@ def test_r5d_backend_selection_and_honest_degrade():
     p = planner.make_stream_plan(BATCH_SPEC, cfg, device_count=4)
     assert p.backend == "single"
     assert any("degrading honestly" in r for r in p.reasons)
-    assert p.peak_bytes == 131_072 + 1_310_720
+    assert p.peak_bytes == 131_072 + 2_097_152 + 1_310_720
     # auto engages shard_map exactly when one device per block exists.
     p = planner.make_stream_plan(BATCH_SPEC, SolveConfig(truncate_rank=16),
                                  device_count=8)
@@ -815,3 +820,84 @@ def test_checkpoint_saved_on_8_devices_restores_on_1(tmp_path):
         print("OK")
     """, devices=1)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Falkon-style measured-memory checks: the compiled executable's actual
+# peak must stay within the planner's closed forms (keeps R5/R5d honest
+# — these measurements are what surfaced the repair-transient term)
+# ---------------------------------------------------------------------------
+
+MEM_SPEC = ASpec(m=64, n=4096, nnz=64 * 4096, num_blocks=8, kind="stream")
+
+
+def test_r5_measured_peak_within_closed_form(memory_checker):
+    """R5: the single-host per-batch update's measured XLA temporaries
+    (a T=1 scan window IS the per-batch loop — same compiled step) stay
+    within ``streaming_bytes``.  Lowered from avals: no data needed."""
+    from repro.stream import window as sw
+    cfg = SolveConfig(truncate_rank=16, num_blocks=8)
+    p = planner.make_window_plan(MEM_SPEC, cfg, device_count=1)
+    assert p.backend == "single"
+    r_b = (min(MEM_SPEC.m, 16 + cfg.oversample) if p.rank is None
+           else p.rank)
+    fn = sw._window_fn("dense", 8, MEM_SPEC.m, 512, 4096, r_b, 16,
+                       p.rank, cfg.oversample, cfg.power_iters,
+                       cfg.method, cfg.use_kernel,
+                       float(cfg.history_decay))
+    key = jax.random.PRNGKey(0)
+    f32 = jnp.float32
+    args = (key, jax.ShapeDtypeStruct((16,), f32),
+            jax.ShapeDtypeStruct((4096, 16), f32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            (jax.ShapeDtypeStruct((1, MEM_SPEC.m, 4096), f32),
+             jax.ShapeDtypeStruct((1,), jnp.int32)))
+    budget = planner.streaming_bytes(MEM_SPEC, 16, cfg.oversample,
+                                     exact=p.rank is None,
+                                     batch_rank=p.rank)
+    memory_checker(fn, args, budget, label="R5 svd_update (T=1 window)",
+                   component="temp")
+
+
+def test_r5d_measured_peak_within_closed_form_subprocess(memory_checker):
+    """R5d: the sharded ingest's per-device measured temporaries stay
+    within ``streaming_bytes_per_device`` (8 forced host devices)."""
+    out = run_forced_devices("""
+        import importlib
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.api import ASpec, SolveConfig
+        from repro.core import planner
+        si = importlib.import_module("repro.stream.ingest")
+        from repro.stream.state import STREAM_AXIS
+
+        d, n, m_b, k, p_os = 8, 4096, 32, 16, 8
+        spec = ASpec(m=m_b, n=n, nnz=m_b * n, num_blocks=d, kind="stream")
+        cfg = SolveConfig(truncate_rank=k, oversample=p_os, num_blocks=d,
+                          stream_backend="shard_map")
+        plan = planner.make_stream_plan(spec, cfg, device_count=8)
+        assert plan.backend == "shard_map"
+        r_b = min(m_b, k + p_os) if plan.rank is None else plan.rank
+        mesh, fn = si._sharded_ingest_fn(
+            d, "dense", m_b, n // d, r_b, k, plan.rank, p_os,
+            cfg.power_iters, cfg.method, cfg.use_kernel)
+        key = jax.random.PRNGKey(0)
+        def sds(shape, dtype, spec_):
+            return jax.ShapeDtypeStruct(
+                shape, dtype, sharding=NamedSharding(mesh, spec_))
+        args = (sds((m_b, n), jnp.float32, P(None, STREAM_AXIS)),
+                sds((d,) + key.shape, key.dtype, P(STREAM_AXIS)),
+                sds(key.shape, key.dtype, P()),
+                sds((n, k), jnp.float32, P(STREAM_AXIS, None)),
+                sds((k,), jnp.float32, P()))
+        stats = fn.lower(*args).compile().memory_analysis()
+        budget = planner.streaming_bytes_per_device(
+            spec, k, p_os, exact=plan.rank is None, batch_rank=plan.rank)
+        print("MEASURED", int(stats.temp_size_in_bytes), budget)
+    """)
+    measured, budget = (int(x) for x in
+                        out.split("MEASURED")[1].split())
+    memory_checker.check_value(measured, budget,
+                               label="R5d sharded ingest per-device temp")

@@ -317,6 +317,36 @@ def test_r6_byte_estimates_hand_computed():
         + planner.streaming_bytes(SPEC, 16, 8, exact=True))
 
 
+def test_r6_measured_peak_within_closed_form(memory_checker):
+    """R6: the compiled T=4 scan window's measured footprint (temps +
+    args + outputs − aliased: the whole dispatch is resident, which is
+    exactly what ``window_bytes`` prices) stays within the closed form.
+    Lowered from avals — no data materialized."""
+    cfg = R6_CFG
+    plan = planner.make_window_plan(SPEC, cfg, device_count=1)
+    r_b = (min(SPEC.m, 16 + cfg.oversample) if plan.rank is None
+           else plan.rank)
+    fn = sw._window_fn("dense", 8, SPEC.m, 512, 4096, r_b, 16,
+                       plan.rank, cfg.oversample, cfg.power_iters,
+                       cfg.method, cfg.use_kernel,
+                       float(cfg.history_decay))
+    key = jax.random.PRNGKey(0)
+    f32 = jnp.float32
+    T = 4
+    args = (key, jax.ShapeDtypeStruct((16,), f32),
+            jax.ShapeDtypeStruct((4096, 16), f32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            (jax.ShapeDtypeStruct((T, SPEC.m, 4096), f32),
+             jax.ShapeDtypeStruct((T,), jnp.int32)))
+    budget = planner.window_bytes(SPEC, 16, cfg.oversample,
+                                  exact=plan.rank is None, window=T,
+                                  batch_rank=plan.rank)
+    memory_checker(fn, args, budget, label="R6 scan window (T=4)",
+                   component="total")
+
+
 def test_r6_window_choice_and_explain():
     p = planner.make_window_plan(SPEC, R6_CFG, device_count=1)
     assert p.window == planner.DEFAULT_WINDOW
