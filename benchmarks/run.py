@@ -6,7 +6,7 @@ and optionally machine-readable JSON.
       [--skip SECTION ...] [--only SECTION] [--json OUT.json]
 
 Sections: paper, rank_problem, merge, sparse, randomized, streaming,
-streaming_scan, streaming_dist, lm.  ``--only SECTION`` runs just that section and
+streaming_scan, streaming_dist, serving, lm.  ``--only SECTION`` runs just that section and
 ``--json OUT.json`` additionally writes one record per row with the
 fields CI consumes: ``section``, ``name``, ``shape`` ("MxN" parsed from
 the name, null when the row has no shape), ``us_per_call``, ``rel_err``
@@ -21,7 +21,8 @@ import re
 import sys
 
 SECTIONS = ("paper", "rank_problem", "merge", "sparse", "randomized",
-            "streaming", "streaming_scan", "streaming_dist", "lm")
+            "streaming", "streaming_scan", "streaming_dist", "serving",
+            "lm")
 
 _SHAPE_RE = re.compile(r"(\d+)x(\d+)")
 _ERR_RE = re.compile(
@@ -116,6 +117,15 @@ def _run_streaming_dist(rows, full: bool) -> None:
         rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
 
 
+def _run_serving(rows, full: bool) -> None:
+    from benchmarks import serving
+    print("# top-k serving under live ingest (fused kernel, rule R7)",
+          flush=True)
+    for r in serving.run(**({"universes": (200_000, 1_000_000),
+                             "waves": 120} if full else {})):
+        rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
+
+
 def _run_lm(rows, full: bool) -> None:
     from benchmarks import lm_step
     print("# lm steps (reduced configs)", flush=True)
@@ -133,6 +143,7 @@ _RUNNERS = {
     "streaming": _run_streaming,
     "streaming_scan": _run_streaming_scan,
     "streaming_dist": _run_streaming_dist,
+    "serving": _run_serving,
     "lm": _run_lm,
 }
 

@@ -25,7 +25,11 @@ OUT.json`` and then this script, which asserts
   - ``streaming_dist``  — every ``dist_stream_ingest_*`` row records
     the R5d PER-DEVICE peak at first/last batch plus the hand-computed
     expectation, first == last (flat), and first == expected whenever
-    the shard_map engine actually ran.
+    the shard_map engine actually ran;
+  - ``serving``         — every ``serve_topk_*`` row sustains qps > 0
+    with a recorded p99, the fused kernel matched the oracle
+    bit-for-bit on live factors, and the plan's serving peak equals
+    the hand-computed R7 closed form.
 
 Exit code 0 on success; an AssertionError (non-zero exit) otherwise —
 CI-friendly either way.
@@ -44,6 +48,12 @@ def _derived_int(derived: str, key: str) -> int:
     m = re.search(rf"{re.escape(key)}=(\d+)", derived)
     assert m, f"derived string lacks {key}=: {derived!r}"
     return int(m.group(1))
+
+
+def _derived_float(derived: str, key: str) -> float:
+    m = re.search(rf"{re.escape(key)}=([0-9.eE+-]+)", derived)
+    assert m, f"derived string lacks {key}=: {derived!r}"
+    return float(m.group(1))
 
 
 def check_streaming(recs) -> None:
@@ -102,10 +112,28 @@ def check_streaming_scan(recs) -> None:
              f"{batches} batches — retracing per batch?")
 
 
+def check_serving(recs) -> None:
+    serve = [r for r in recs if r["name"].startswith("serve_topk")]
+    assert serve, "serving section has no serve_topk_* rows"
+    for r in serve:
+        d = r["derived"]
+        qps = _derived_float(d, "qps")
+        assert qps > 0, f"{r['name']}: qps={qps} — the query loop ran?"
+        _derived_float(d, "p99_us")  # tail latency must be recorded
+        assert _derived_int(d, "fused_oracle_match") == 1, \
+            (f"{r['name']}: fused kernel and oracle disagree — the "
+             f"bit-identity contract is broken: {d!r}")
+        assert _derived_int(d, "r7_peak_b") == _derived_int(
+            d, "r7_expected_b"), \
+            (f"{r['name']}: plan serving peak != hand-computed R7 "
+             f"closed form: {d!r}")
+
+
 SECTION_CHECKS = {
     "streaming": check_streaming,
     "streaming_scan": check_streaming_scan,
     "streaming_dist": check_streaming_dist,
+    "serving": check_serving,
 }
 
 

@@ -1,12 +1,13 @@
 """The ranky-lint rule set: the repo's hot-path JAX discipline, written
-down as RL101–RL106.
+down as RL101–RL107.
 
 Every rule here encodes a regression class this repo has actually
 shipped-then-fixed (see ISSUE/ROADMAP history): per-ingest host syncs
 (RL101), PRNG chains losing a fold_in (RL102), collectives outside
 their shard_map region (RL103), accidental densification (RL104),
-retrace/recompile hazards (RL105), and unregistered pytree dataclasses
-crossing a jit boundary (RL106).
+retrace/recompile hazards (RL105), unregistered pytree dataclasses
+crossing a jit boundary (RL106), and per-iteration host syncs in the
+serving/ingest hot loops (RL107).
 
 Precision over recall: a rule stays silent when it cannot *prove* the
 pattern from the AST (variable axis names, cross-module calls, values
@@ -494,3 +495,76 @@ class PytreeCompleteness(Rule):
         else:
             return None
         return name if name[:1].isupper() else None
+
+
+# ---------------------------------------------------------------------------
+# RL107 — host sync inside a serving/ingest hot loop
+# ---------------------------------------------------------------------------
+
+_HOT_PATH_DIRS = {"serve", "stream"}
+
+
+@register_rule
+class HostSyncInHotLoop(Rule):
+    id = "RL107"
+    name = "host-sync-in-hot-loop"
+    description = ("jax.device_get/.item()/.block_until_ready()/"
+                   "np.asarray on device values per iteration of a "
+                   "host-level loop in a serving or ingest hot path — "
+                   "every pass round-trips the device, serializing the "
+                   "dispatch pipeline")
+
+    def check(self, m: ModuleInfo, project: ProjectContext
+              ) -> Iterator[Finding]:
+        # Scoped to the hot-path subsystems: modules living under a
+        # serve/ or stream/ directory.  Host code elsewhere may loop
+        # and sync freely (benchmarks, examples, checkpoint restore).
+        parts = m.path.replace("\\", "/").split("/")
+        if not (_HOT_PATH_DIRS & set(parts[:-1])):
+            return
+        seen: Set[int] = set()
+        for loop in ast.walk(m.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            fi = m.enclosing_function(loop)
+            if fi is not None and fi.in_region:
+                continue  # compiles away — RL101's territory
+            for stmt in loop.body:
+                for node in walk_skipping_functions(stmt):
+                    if not isinstance(node, ast.Call) or id(node) in seen:
+                        continue
+                    hit = self._classify(node, fi, m)
+                    if hit:
+                        seen.add(id(node))
+                        where = (fi.qualname if fi is not None
+                                 else "<module>")
+                        yield self.finding(
+                            m, node,
+                            f"{hit} inside a host loop of hot path "
+                            f"'{where}' syncs the device EVERY "
+                            f"iteration, serializing the serving/ingest "
+                            f"dispatch pipeline; batch the work into one "
+                            f"dispatch or hoist ONE sync after the loop")
+
+    @staticmethod
+    def _classify(node: ast.Call, fi: Optional[FunctionInfo],
+                  m: ModuleInfo) -> Optional[str]:
+        if isinstance(node.func, ast.Attribute) and not node.args:
+            if node.func.attr == "item":
+                return ".item()"
+            if node.func.attr == "block_until_ready":
+                return ".block_until_ready()"
+        name = m.resolve_or_name(node.func)
+        if name == "jax.device_get":
+            return "jax.device_get"
+        if name in ("numpy.asarray", "numpy.array") and node.args:
+            # unlike RL101 (where ANY asarray inside a compiled region
+            # is wrong), a host loop may legitimately asarray host
+            # values — only flag arguments that cannot be proven static
+            if not _is_static_expr(node.args[0], fi, m):
+                return (name.replace("numpy.", "np.")
+                        + " on a potential device value")
+        if name in ("float", "int") and len(node.args) == 1:
+            if not _is_static_expr(node.args[0], fi, m):
+                return f"{name}() on a potential device value"
+        return None

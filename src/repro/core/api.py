@@ -54,6 +54,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import planner, ranky, sparse
+from repro.serve import ranker as ranker_mod
+from repro.serve import snapshot as snapshot_mod
 from repro.core.planner import ASpec, Plan, PlanError  # noqa: F401  (re-export)
 from repro.core.ranky import default_key  # noqa: F401  (re-export)
 
@@ -71,9 +73,10 @@ MatrixInput = Union[np.ndarray, jnp.ndarray, "sparse.COOMatrix",
                     "sparse.BlockEll"]
 
 
-def _bad(field_a: str, val_a, field_b: str, val_b, why: str) -> ValueError:
+def _bad(field_a: str, val_a, field_b: str, val_b, why: str,
+         kind: str = "SolveConfig") -> ValueError:
     return ValueError(
-        f"invalid SolveConfig: {field_a}={val_a!r} with {field_b}={val_b!r} "
+        f"invalid {kind}: {field_a}={val_a!r} with {field_b}={val_b!r} "
         f"— {why}")
 
 
@@ -911,3 +914,183 @@ def svd_stream(batches, config: Optional[SolveConfig] = None, *,
     v = state.trimmed_v() if config.want_right else None
     return SVDResult(u=state.u, s=state.s, v=v, plan=last_plan,
                      diagnostics=diag, state=state)
+
+
+# ---------------------------------------------------------------------------
+# Serving front door: serve_init / serve_topk (planner rule R7)
+# ---------------------------------------------------------------------------
+
+SERVE_BACKENDS = ("single", "shard_map", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeTopKConfig:
+    """Every knob of the top-k serving path, validated on construction
+    (the ``SolveConfig`` contract: invalid configs cannot be built).
+
+    * ``batch_size`` — the request-wave width B the plan prices; waves
+      up to this many query rows are accepted per ``serve_topk`` call.
+    * ``k_top`` — items returned per query.
+    * ``block_n`` — fused-kernel score-tile width (multiple of 128); the
+      per-wave working set is one (B, block_n) tile, independent of N.
+    * ``quantize`` — serve int8 factors + per-item scales (kvquant
+      axis=-1) instead of f32 ``v`` (~4x smaller residency; the scale
+      folds into the score contraction, nothing is dequantized).
+    * ``keep_u`` — carry the state's ``u`` rows in the snapshot for
+      known-user lookups (``ranker.user_queries``); costs
+      4 * rows_seen * k resident bytes.
+    * ``use_kernel`` — fused score+top-k kernel vs the jnp fallback
+      that materializes the (B, N) score matrix (planner rule R7 prices
+      both; results are bit-identical either way).
+    * ``serve_backend`` — ``"single"``, ``"shard_map"`` (one column
+      block per device, ``v`` stays sharded; degrades honestly to
+      single when the device count does not match) or ``"auto"``.
+    * ``num_blocks`` — column-block count; ``None`` takes the state's.
+    * ``memory_budget_bytes`` — R7 budget (default 4 GiB).
+    """
+
+    batch_size: int = 32
+    k_top: int = 10
+    block_n: int = 512
+    quantize: bool = False
+    keep_u: bool = False
+    use_kernel: bool = True
+    serve_backend: str = "auto"
+    num_blocks: Optional[int] = None
+    memory_budget_bytes: Optional[int] = None
+
+    def __post_init__(self):
+        # --- single-field domains -----------------------------------
+        if self.batch_size < 1:
+            raise ValueError(
+                f"invalid ServeTopKConfig: batch_size={self.batch_size} "
+                f"must be >= 1")
+        if self.k_top < 1:
+            raise ValueError(
+                f"invalid ServeTopKConfig: k_top={self.k_top} must be >= 1")
+        if self.block_n < 128 or self.block_n % 128:
+            raise ValueError(
+                f"invalid ServeTopKConfig: block_n={self.block_n} must be "
+                f"a positive multiple of 128 (the TPU lane width)")
+        if self.serve_backend not in SERVE_BACKENDS:
+            raise ValueError(
+                f"invalid ServeTopKConfig: serve_backend="
+                f"{self.serve_backend!r} must be one of {SERVE_BACKENDS}")
+        if self.num_blocks is not None and self.num_blocks < 1:
+            raise ValueError(
+                f"invalid ServeTopKConfig: num_blocks={self.num_blocks} "
+                f"must be >= 1")
+        if (self.memory_budget_bytes is not None
+                and self.memory_budget_bytes < 1):
+            raise ValueError(
+                f"invalid ServeTopKConfig: memory_budget_bytes="
+                f"{self.memory_budget_bytes} must be >= 1")
+
+        # --- cross-field constraints (each names both fields) -------
+        if self.use_kernel and self.k_top > self.block_n:
+            raise _bad("k_top", self.k_top, "block_n", self.block_n,
+                       "the fused kernel's running top-k must fit one "
+                       "score tile (its merge buffer is tile-bounded); "
+                       "raise block_n or set use_kernel=False",
+                       kind="ServeTopKConfig")
+
+
+@dataclasses.dataclass
+class ServeHandle:
+    """One live serving endpoint: the double-buffered snapshot cell plus
+    the R7 plan and config that built it.  ``commit`` folds a freshly
+    ingested state in (stage + atomic publish); reads via
+    ``serve_topk`` always see exactly one consistent snapshot."""
+
+    buffer: "snapshot_mod.SnapshotBuffer"
+    plan: Plan
+    config: ServeTopKConfig
+
+    def read(self):
+        return self.buffer.read()
+
+    @property
+    def version(self) -> int:
+        return self.buffer.version
+
+    def commit(self, state):
+        """Publish a new state to readers (between request waves)."""
+        if state.n != self.buffer.read().n:
+            raise ValueError(
+                f"state.n={state.n} does not match the serving "
+                f"universe n={self.buffer.read().n}; serve_init a new "
+                f"handle to change universes")
+        return self.buffer.commit(state)
+
+
+def _coerce_serve_config(config: Optional[ServeTopKConfig],
+                         overrides: Dict[str, Any]) -> ServeTopKConfig:
+    if config is None:
+        return ServeTopKConfig(**overrides)
+    if overrides:
+        return dataclasses.replace(config, **overrides)
+    return config
+
+
+def serve_init(state, config: Optional[ServeTopKConfig] = None,
+               **overrides) -> ServeHandle:
+    """Open a serving endpoint over a streamed state (planner rule R7).
+
+    Builds the initial :class:`~repro.serve.snapshot.ServingSnapshot`
+    (quantized to int8 when configured), shards ``v`` over the stream
+    mesh when the plan picks the sharded ranker, and returns a
+    :class:`ServeHandle` whose ``commit(new_state)`` publishes ingests
+    to readers without ever exposing a torn state.  The R7 plan —
+    closed-form serving bytes, fused vs fallback, backend — rides the
+    handle; ``handle.plan.explain()`` narrates it.
+    """
+    from repro.stream import state as stream_state
+
+    config = _coerce_serve_config(config, overrides)
+    if config.num_blocks is not None and config.num_blocks != state.num_blocks:
+        raise _bad("num_blocks", config.num_blocks,
+                   "state.num_blocks", state.num_blocks,
+                   "the serving plan must price the state's own column "
+                   "blocking; drop num_blocks= to take the state's",
+                   kind="ServeTopKConfig")
+    resolved = (config if config.num_blocks is not None
+                else dataclasses.replace(config,
+                                         num_blocks=state.num_blocks))
+    plan = planner.make_serve_plan(
+        state.n, state.rank, resolved, device_count=jax.device_count())
+    if plan.backend == "shard_map":
+        state = stream_state.shard_state(state)
+    snap = snapshot_mod.ServingSnapshot.from_state(
+        state, quantize=resolved.quantize, keep_u=resolved.keep_u)
+    return ServeHandle(buffer=snapshot_mod.SnapshotBuffer(snap),
+                       plan=plan, config=resolved)
+
+
+def serve_topk(handle: ServeHandle, queries,
+               k_top: Optional[int] = None) -> "ranker_mod.TopKResult":
+    """Answer one request wave against the handle's CURRENT snapshot.
+
+    ``queries`` are factor-space rows (B, k), B up to the configured
+    ``batch_size`` (the wave width the R7 plan priced); raw interaction
+    rows project through ``ranker.project_rows`` first.  Returns a
+    :class:`~repro.serve.ranker.TopKResult` — scores descending, ties
+    to the lowest item id, stamped with the snapshot version.
+    """
+    queries = jnp.asarray(queries)
+    cfg = handle.config
+    if queries.ndim != 2:
+        raise ValueError(
+            f"queries must be a (B, k) batch of factor-space rows, got "
+            f"shape {queries.shape}")
+    if queries.shape[0] > cfg.batch_size:
+        raise ValueError(
+            f"wave of {queries.shape[0]} queries exceeds the planned "
+            f"batch_size={cfg.batch_size}; split the wave or serve_init "
+            f"with a larger batch_size")
+    return ranker_mod.score_topk(
+        handle.read(), queries,
+        cfg.k_top if k_top is None else k_top,
+        block_n=cfg.block_n,
+        sharded=handle.plan.backend == "shard_map",
+        use_kernel=cfg.use_kernel)
+

@@ -155,7 +155,11 @@ def merge_panels_svd(panels: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """
     d, m, _ = panels.shape
     p = jnp.transpose(panels, (1, 0, 2)).reshape(m, d * m)
-    u, s, _ = jnp.linalg.svd(p, full_matrices=True)
+    # Economy SVD: V is discarded and M <= D*M, so U and S are the same
+    # either way — full_matrices=True would allocate a dead (D*M, D*M)
+    # right-vector buffer that dominated the measured R1 peak (caught by
+    # the tests/test_api.py memory_checker).
+    u, s, _ = jnp.linalg.svd(p, full_matrices=False)
     k = s.shape[0]
     if k < m:
         s = jnp.concatenate([s, jnp.zeros((m - k,), s.dtype)])

@@ -20,6 +20,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import sketch_panel as _sp
 from repro.kernels import sparse_gram as _sg
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import topk_score as _tk
 
 
 def _mode() -> str:
@@ -168,6 +169,57 @@ def flash_attention(
         block_q=block_q, block_k=block_k, interpret=(mode == "interpret"),
     )
     return out[:, :, :sq, :] if need_pad else out
+
+
+def topk_score(
+    qs: jnp.ndarray,
+    v: jnp.ndarray,
+    k_top: int,
+    *,
+    scale: Optional[jnp.ndarray] = None,
+    valid_n=None,
+    index_offset=0,
+    block_n: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k of ``qs @ v.T`` without materializing the (B, N) scores.
+
+    qs is (B, k) queries with diag(s) folded in; v is (N, k) item
+    factors (f32, or int8 with per-item ``scale`` (N,) folded into the
+    score).  Returns (vals (B, k_top) f32, idx (B, k_top) i32), scores
+    descending, ties broken by lowest index — bit-identical to the ref
+    oracle.  ``valid_n`` (default N) masks trailing padding rows of v;
+    ``index_offset`` shifts emitted indices; both may be traced scalars
+    (the sharded serving backend passes per-device values).  Pads B to
+    the 8-sublane grid, the factor dim to 128 lanes (zero columns are
+    inert in the contraction) and N to block_n tiles (masked to -inf by
+    ``valid_n`` so they can never be selected); requires k_top <= valid
+    rows so padding never reaches the output.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return _ref.topk_score(
+            qs, v, k_top,
+            scale=scale, valid_n=valid_n, index_offset=index_offset,
+        )
+    b, n = qs.shape[0], v.shape[0]
+    if valid_n is None:
+        valid_n = n
+    qs_pad, pad_b = _pad_axis(qs.astype(jnp.float32), 0, 8)
+    qs_pad, _ = _pad_axis(qs_pad, 1, 128)
+    v_pad, _ = _pad_axis(v, 1, 128)
+    block_n = min(block_n, max(128, n))
+    v_pad, _ = _pad_axis(v_pad, 0, block_n)
+    if scale is None:
+        scale2 = jnp.ones((v_pad.shape[0], 1), jnp.float32)
+    else:
+        scale2, _ = _pad_axis(
+            scale.astype(jnp.float32).reshape(-1, 1), 0, block_n
+        )
+    vals, idx = _tk.topk_score(
+        qs_pad, v_pad, scale2, valid_n, index_offset,
+        k_top=k_top, block_n=block_n, interpret=(mode == "interpret"),
+    )
+    return (vals[:b], idx[:b]) if pad_b else (vals, idx)
 
 
 def ssd_scan(

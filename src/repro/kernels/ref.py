@@ -64,6 +64,42 @@ def sketch_panel(
 
 
 # ---------------------------------------------------------------------------
+# topk_score: fused q . diag(s) V^T scoring + running top-k (serving path)
+# ---------------------------------------------------------------------------
+
+def topk_score(
+    qs: jnp.ndarray,      # (B, k) queries with diag(s) already folded in
+    v: jnp.ndarray,       # (N, k) right factors (f32 or int8)
+    k_top: int,
+    *,
+    scale: Optional[jnp.ndarray] = None,  # (N,) per-item dequant scales
+    valid_n=None,                          # rows >= valid_n are masked out
+    index_offset=0,                        # added to returned indices
+):
+    """(B, k_top) top scores + indices of ``qs @ v.T`` (ground truth).
+
+    The oracle materializes the full (B, N) score matrix — exactly what
+    the fused kernel must never do — and selects with ``jax.lax.top_k``,
+    whose documented tie rule (equal scores -> lowest index first, values
+    in descending order) is the ONE selection semantics the kernel
+    reproduces bit-for-bit.  ``scale`` folds per-item int8 dequantization
+    into the score (score[b, j] = (qs[b] . v[j]) * scale[j]); ``valid_n``
+    masks padding rows to -inf so they can never be selected (callers
+    guarantee k_top <= valid rows and finite scores); ``valid_n`` and
+    ``index_offset`` may be traced scalars (the sharded backend feeds
+    per-device offsets).
+    """
+    scores = qs.astype(jnp.float32) @ v.astype(jnp.float32).T  # (B, N)
+    if scale is not None:
+        scores = scores * scale.astype(jnp.float32)[None, :]
+    if valid_n is not None:
+        cols = jnp.arange(v.shape[0])[None, :]
+        scores = jnp.where(cols < valid_n, scores, -jnp.inf)
+    vals, idx = jax.lax.top_k(scores, k_top)
+    return vals, (idx + index_offset).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # flash_attention: fused causal/local GQA attention with optional softcap
 # ---------------------------------------------------------------------------
 

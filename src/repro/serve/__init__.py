@@ -1,1 +1,5 @@
 from repro.serve.engine import ServeConfig, generate, prefill_cache  # noqa: F401
+from repro.serve.ranker import (  # noqa: F401
+    TopKResult, fold_queries, project_rows, score_topk, user_queries,
+)
+from repro.serve.snapshot import ServingSnapshot, SnapshotBuffer  # noqa: F401

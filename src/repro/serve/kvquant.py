@@ -19,15 +19,26 @@ from typing import Tuple
 import jax.numpy as jnp
 
 
-def quantize(kv: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(.., S, Dh) -> (int8 (.., S, Dh), f32 scales (.., S, 1))."""
-    amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1, keepdims=True)
+def quantize(
+    kv: jnp.ndarray, axis: int = -1
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 over ``axis``: (.., S, Dh) -> int8 + f32 scales
+    with a keepdims-1 scale axis (default (.., S, 1)).
+
+    ``axis`` is the reduced dimension — each slice along it shares one
+    scale.  The KV cache uses the default (per-position, reduce Dh); the
+    serving factor path quantizes ``v`` (N, k) the same way so each
+    item row's scale folds into the score contraction.  Max round-trip
+    error per element is bounded by scale/2 = amax/254 along its slice.
+    """
+    amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=axis, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / 127.0
     q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale), -127, 127)
     return q.astype(jnp.int8), scale
 
 
 def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize`; scale broadcasts over its 1-axis."""
     return q.astype(jnp.float32) * scale
 
 

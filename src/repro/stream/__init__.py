@@ -11,6 +11,7 @@ a single ``lax.scan`` dispatch (planner rule R6).  The public front
 door lives at ``repro.core.api.svd_update`` / ``svd_stream`` /
 ``svd_init``.
 """
+from repro.stream.decay import decay_from_timestamps  # noqa: F401
 from repro.stream.ingest import (  # noqa: F401
     IngestInfo,
     ingest,
@@ -38,4 +39,5 @@ __all__ = [
     "ingest_window", "bucket_signature", "build_window",
     "adaptive_oversample", "IngestInfo", "as_delta", "delta_shape",
     "shard_state", "gather_state", "stream_mesh", "STREAM_AXIS",
+    "decay_from_timestamps",
 ]

@@ -1,0 +1,30 @@
+"""RL107 true negative: hot-path loops that keep values on device, one
+sync hoisted AFTER the loop, static host math inside loops, and loops
+inside compiled regions (RL101's territory, not RL107's)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def serve_many(handle, waves):
+    results = [handle.topk(w) for w in waves]     # comprehension, no sync
+    last = results[-1]
+    last.scores.block_until_ready()               # ONE sync, after the loop
+    return np.asarray(last.indices)
+
+
+def fold_window(carries, u_stack):
+    rows = []
+    for t in range(len(carries)):
+        m_t = int(u_stack.shape[1])               # static shape math
+        rows.append(u_stack[t, :m_t])             # stays on device
+    folded = jnp.concatenate(rows)
+    return jax.device_get(folded)                 # one sync after the loop
+
+
+@jax.jit
+def scan_body(xs):
+    acc = jnp.float32(0.0)
+    for x in xs:                                  # in-region loop: unrolled
+        acc = acc + x.sum()                       # at trace time, no sync
+    return acc

@@ -1,0 +1,22 @@
+"""RL107 true positive: per-iteration host syncs in a serving request
+loop (the fixture is analyzed under a serve/ hot path)."""
+import jax
+import numpy as np
+
+
+def serve_loop(handle, waves):
+    out = []
+    for wave in waves:
+        res = handle.topk(wave)
+        res.scores.block_until_ready()      # RL107: sync every wave
+        out.append(np.asarray(res.indices))  # RL107: asarray on device
+    return out
+
+
+def ingest_loop(state, batches, update):
+    total = 0.0
+    while batches:
+        state, info = update(state, batches.pop())
+        total += float(info.residual)        # RL107: float() per ingest
+        probe = jax.device_get(state.s)      # RL107: device_get per ingest
+    return state, total, probe

@@ -277,3 +277,88 @@ def test_ssd_state_decays():
     x2 = x.at[:, : l // 2].set(jax.random.normal(ks[2], (b, l // 2, h, p)))
     _, hf2 = ssd.ssd_scan(x2, dt, a, bm, cm, chunk=64, interpret=True)
     np.testing.assert_allclose(np.asarray(hf), np.asarray(hf2), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# topk_score (fused score + running top-k)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "b,k,n,k_top,block_n",
+    [
+        (3, 5, 700, 10, 256),    # ragged last tile
+        (8, 16, 512, 4, 512),    # single tile
+        (1, 3, 130, 7, 512),     # n < block_n, unaligned everything
+        (5, 16, 1024, 16, 128),  # k_top == block_n grid stress
+    ],
+)
+def test_topk_score_sweep_bitwise(b, k, n, k_top, block_n, monkeypatch):
+    """The fused kernel is BIT-identical to the oracle — values AND
+    indices (same tie rule: descending values, ties to lowest index)."""
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    ks = jax.random.split(KEY, 2)
+    qs = jax.random.normal(ks[0], (b, k))
+    v = jax.random.normal(ks[1], (n, k))
+    got_v, got_i = ops.topk_score(qs, v, k_top, block_n=block_n)
+    want_v, want_i = ref.topk_score(qs, v, k_top)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+def test_topk_score_ties_resolve_to_lowest_index(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    qs = jax.random.normal(KEY, (4, 8))
+    base = jax.random.normal(jax.random.fold_in(KEY, 1), (75, 8))
+    v = jnp.concatenate([base, base, base])  # every score a 3-way tie
+    got_v, got_i = ops.topk_score(qs, v, 9, block_n=128)
+    want_v, want_i = ref.topk_score(qs, v, 9)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+def test_topk_score_scale_offset_valid_n(monkeypatch):
+    """The sharded per-device call shape: per-item scales folded into
+    the contraction, a global index offset, and a ragged valid width
+    masking the padded tail to -inf."""
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    ks = jax.random.split(KEY, 3)
+    qs = jax.random.normal(ks[0], (5, 12))
+    v = jax.random.normal(ks[1], (640, 12))
+    scale = jnp.exp(jax.random.normal(ks[2], (640,)) * 0.3)
+    got = ops.topk_score(qs, v, 11, scale=scale, valid_n=613,
+                         index_offset=1000, block_n=256)
+    want = ref.topk_score(qs, v, 11, scale=scale, valid_n=613,
+                          index_offset=1000)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    # masked tail never surfaces: all ids in [offset, offset + valid)
+    ids = np.asarray(got[1])
+    assert ids.min() >= 1000 and ids.max() < 1000 + 613
+
+
+def test_topk_score_int8_factors(monkeypatch):
+    """int8 factor rows + per-item dequant scales (the quantized
+    serving path) stay bit-identical to the oracle fed the same
+    operands."""
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    from repro.serve import kvquant
+    ks = jax.random.split(KEY, 2)
+    qs = jax.random.normal(ks[0], (4, 8))
+    v = jax.random.normal(ks[1], (300, 8)) * 2.0
+    v_q, v_scale = kvquant.quantize(v, axis=-1)
+    got = ops.topk_score(qs, v_q, 6, scale=v_scale[:, 0],
+                         valid_n=300, block_n=128)
+    want = ref.topk_score(qs, v_q, 6, scale=v_scale[:, 0], valid_n=300)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_topk_score_ref_mode_dispatch():
+    """conftest pins REPRO_KERNELS=ref: the dispatch must route to the
+    oracle without padding artifacts."""
+    qs = jax.random.normal(KEY, (2, 4))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (50, 4))
+    got_v, got_i = ops.topk_score(qs, v, 5)
+    want_v, want_i = ref.topk_score(qs, v, 5)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))

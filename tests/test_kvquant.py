@@ -74,3 +74,33 @@ def test_cache_memory_halved():
     # smoke config head_dim=16 -> per-position scale overhead f32/16 = 25%;
     # production head_dim=128 gives ~0.52x
     assert nbytes(c8) < 0.7 * nbytes(c16)
+
+
+@pytest.mark.parametrize("axis", [-1, 0, 1])
+def test_quantize_axis_roundtrip_error_bound(axis):
+    """The documented per-element bound: |deq - x| <= scale/2 =
+    amax_slice/254, where amax is taken over the reduced ``axis``."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (7, 33, 5)) * \
+        jnp.exp(jax.random.normal(jax.random.PRNGKey(4), (7, 33, 5)))
+    q, s = kvquant.quantize(x, axis=axis)
+    assert q.dtype == jnp.int8
+    want_shape = list(x.shape)
+    want_shape[axis] = 1
+    assert s.shape == tuple(want_shape)
+    err = jnp.abs(kvquant.dequantize(q, s) - x)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    bound = jnp.maximum(amax, 1e-8) / 254.0
+    # rounding puts every element within half a quantization step
+    assert bool(jnp.all(err <= bound + 1e-7 * amax)), float(
+        jnp.max(err / bound))
+
+
+def test_quantize_axis_matches_transposed_default():
+    """axis=0 on x equals the default axis on x.T, transposed back —
+    the serving path (per-item rows of a (N, k) factor) relies on the
+    axis parameter being exactly this."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 8)) * 2.0
+    q0, s0 = kvquant.quantize(x, axis=0)
+    qt, st = kvquant.quantize(x.T)
+    np.testing.assert_array_equal(np.asarray(q0), np.asarray(qt.T))
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(st.T))

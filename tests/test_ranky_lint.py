@@ -16,7 +16,7 @@ from repro.analysis.suppress import collect_suppressions
 HERE = os.path.dirname(os.path.abspath(__file__))
 FIXTURES = os.path.join(HERE, "lint_fixtures")
 REPO = os.path.dirname(HERE)
-RULE_IDS = ("RL101", "RL102", "RL103", "RL104", "RL105", "RL106")
+RULE_IDS = ("RL101", "RL102", "RL103", "RL104", "RL105", "RL106", "RL107")
 
 
 def _fixture(name):
@@ -26,9 +26,14 @@ def _fixture(name):
 
 def _analyze_fixture(name, path=None):
     # Synthetic src-like paths keep RL104's tests/-whitelist out of the
-    # way; the whitelist itself is exercised explicitly below.
-    return analyze_sources([(path or f"src/fixtures/{name}",
-                             _fixture(name))])
+    # way; the whitelist itself is exercised explicitly below.  RL107 is
+    # scoped to the serve/stream hot-path directories, so its fixtures
+    # analyze under one.
+    if path is None:
+        base = ("src/repro/serve/" if name.startswith("rl107")
+                else "src/fixtures/")
+        path = base + name
+    return analyze_sources([(path, _fixture(name))])
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +80,34 @@ def test_rl104_whitelists_test_paths():
     result = _analyze_fixture("rl104_pos.py",
                               path="tests/test_oracle.py")
     assert not [f for f in result.findings if f.rule == "RL104"]
+
+
+def test_rl107_positive_catches_every_sync_kind():
+    result = _analyze_fixture("rl107_pos.py")
+    msgs = " ".join(f.message for f in result.findings
+                    if f.rule == "RL107")
+    for kind in (".block_until_ready()", "np.asarray", "float()",
+                 "jax.device_get"):
+        assert kind in msgs, f"RL107 missed {kind}"
+
+
+def test_rl107_is_scoped_to_hot_path_directories():
+    # The same syncing loops are legal host code outside serve*/stream*
+    # (benchmarks, examples, checkpoint restore...).
+    result = _analyze_fixture("rl107_pos.py",
+                              path="src/repro/core/driver.py")
+    assert not [f for f in result.findings if f.rule == "RL107"]
+
+
+def test_rl107_suppression():
+    src = _fixture("rl107_pos.py")
+    silenced = "\n".join(
+        line + "  # ranky-lint: disable=RL107" if line and
+        not line.lstrip().startswith(("#", '"""', "import")) and
+        ("RL107" in line) else line
+        for line in src.splitlines())
+    result = analyze_sources([("src/repro/serve/loop.py", silenced)])
+    assert not [f for f in result.findings if f.rule == "RL107"]
 
 
 # ---------------------------------------------------------------------------

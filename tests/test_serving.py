@@ -1,0 +1,411 @@
+"""Streaming top-k serving engine tests: snapshot double-buffering
+(including the torn-read hammer), ranker equivalences (dense vs oracle
+vs sharded vs int8), the serve_init/serve_topk front door with its R7
+plan, ServeTopKConfig validation, and decay_from_timestamps."""
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import planner
+from repro.core.api import (ServeTopKConfig, SolveConfig, serve_init,
+                            serve_topk, svd_init, svd_update)
+from repro.kernels import ref as kref
+from repro.serve import ServingSnapshot, SnapshotBuffer, ranker
+from repro.stream import decay_from_timestamps, init_state
+
+from conftest import run_forced_devices  # noqa: E402
+
+KEY = jax.random.PRNGKey(11)
+N, D, K = 96, 4, 8
+CFG = SolveConfig(method="random", truncate_rank=K, num_blocks=D,
+                  stream_backend="single")
+
+
+def _ingested_states(count=3, rows=16, seed=0):
+    """A chain of streamed states over the same universe, one per
+    ingest — each a distinct published version for the buffer tests."""
+    a = np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                     (rows * count, N)))
+    state, states = svd_init(N, CFG), []
+    for i in range(count):
+        state = svd_update(state, a[i * rows:(i + 1) * rows], CFG).state
+        states.append(state)
+    return states
+
+
+STATES = _ingested_states()
+
+
+# ---------------------------------------------------------------------------
+# ServingSnapshot / SnapshotBuffer
+# ---------------------------------------------------------------------------
+
+def test_snapshot_captures_consistent_triple():
+    snap = ServingSnapshot.from_state(STATES[0], keep_u=True)
+    assert snap.rank == K and snap.n == N and snap.num_blocks == D
+    assert snap.version == 0 and not snap.quantized
+    np.testing.assert_array_equal(np.asarray(snap.s),
+                                  np.asarray(STATES[0].s))
+    np.testing.assert_array_equal(np.asarray(snap.v),
+                                  np.asarray(STATES[0].v))
+    np.testing.assert_array_equal(np.asarray(snap.u_rows),
+                                  np.asarray(STATES[0].u))
+
+
+def test_snapshot_rejects_rank0_state():
+    with pytest.raises(ValueError, match="rank-0"):
+        ServingSnapshot.from_state(init_state(N, num_blocks=D))
+
+
+def test_snapshot_quantized_drops_f32_factors():
+    snap = ServingSnapshot.from_state(STATES[0], quantize=True)
+    assert snap.quantized and snap.v is None
+    assert snap.v_q.dtype == jnp.int8
+    assert snap.v_q.shape == STATES[0].v.shape
+    assert snap.v_scale.shape == (STATES[0].v.shape[0], 1)
+
+
+def test_snapshot_is_a_pytree():
+    snap = ServingSnapshot.from_state(STATES[0])
+    again = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(snap), jax.tree_util.tree_leaves(snap))
+    assert again.version == snap.version and again.n == snap.n
+
+
+def test_buffer_stage_is_invisible_until_publish():
+    buf = SnapshotBuffer(ServingSnapshot.from_state(STATES[0]))
+    assert buf.version == 0
+    buf.stage(STATES[1])
+    assert buf.version == 0 and buf.read().version == 0
+    flipped = buf.publish()
+    assert flipped.version == 1 and buf.version == 1
+    # publish with nothing staged is a no-op
+    assert buf.publish().version == 1
+
+
+def test_buffer_commit_bumps_version_and_inherits_options():
+    buf = SnapshotBuffer(
+        ServingSnapshot.from_state(STATES[0], quantize=True, keep_u=True))
+    snap = buf.commit(STATES[1])
+    assert snap.version == 1
+    assert snap.quantized and snap.u_rows is not None  # inherited
+
+
+def test_buffer_torn_read_hammer():
+    """Concurrent ingests + reads: every query must score against
+    exactly ONE published state — a result whose version is v must be
+    bitwise the result precomputed from version v's snapshot alone.
+    A torn (s from one ingest, v from another) mix cannot match any
+    precomputed pair."""
+    states = _ingested_states(count=5, seed=3)
+    snaps = [ServingSnapshot.from_state(s, version=i)
+             for i, s in enumerate(states)]
+    queries = jax.random.normal(KEY, (4, K))
+    expected = {}
+    for snap in snaps:
+        res = ranker.score_topk(snap, queries, 5)
+        expected[snap.version] = (np.asarray(res.scores),
+                                  np.asarray(res.indices))
+
+    buf = SnapshotBuffer(snaps[0])
+    stop = threading.Event()
+    failures = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            i += 1
+            buf.stage(states[i % len(states)])
+            buf.publish()
+        stop.set()
+
+    def reader():
+        while not stop.is_set():
+            snap = buf.read()
+            res = ranker.score_topk(snap, queries, 5)
+            want = expected.get(res.version % len(states))
+            if want is None:
+                failures.append(f"unknown version {res.version}")
+                return
+            if not (np.array_equal(np.asarray(res.scores), want[0])
+                    and np.array_equal(np.asarray(res.indices), want[1])):
+                failures.append(
+                    f"torn read at version {res.version}")
+                return
+
+    threads = [threading.Thread(target=writer)] + \
+        [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    time.sleep(1.0)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not failures, failures
+
+
+# ---------------------------------------------------------------------------
+# ranker
+# ---------------------------------------------------------------------------
+
+def test_score_topk_matches_oracle_bitwise():
+    snap = ServingSnapshot.from_state(STATES[0])
+    queries = jax.random.normal(KEY, (6, K))
+    res = ranker.score_topk(snap, queries, 7)
+    qs = np.asarray(queries) * np.asarray(snap.s)[None, :]
+    want_v, want_i = kref.topk_score(jnp.asarray(qs), snap.v, 7, valid_n=N)
+    np.testing.assert_array_equal(np.asarray(res.scores),
+                                  np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(res.indices),
+                                  np.asarray(want_i))
+    assert res.version == 0
+    # descending scores, indices inside the real (unpadded) universe
+    s = np.asarray(res.scores)
+    assert (np.diff(s, axis=1) <= 0).all()
+    assert np.asarray(res.indices).max() < N
+
+
+def test_score_topk_fallback_matches_kernel_path():
+    snap = ServingSnapshot.from_state(STATES[0])
+    queries = jax.random.normal(KEY, (3, K))
+    a = ranker.score_topk(snap, queries, 5, use_kernel=True)
+    b = ranker.score_topk(snap, queries, 5, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a.scores),
+                                  np.asarray(b.scores))
+    np.testing.assert_array_equal(np.asarray(a.indices),
+                                  np.asarray(b.indices))
+
+
+def test_score_topk_int8_agreement():
+    snap = ServingSnapshot.from_state(STATES[0])
+    snap8 = ServingSnapshot.from_state(STATES[0], quantize=True)
+    queries = jax.random.normal(KEY, (8, K))
+    full = ranker.score_topk(snap, queries, 10)
+    q8 = ranker.score_topk(snap8, queries, 10)
+    # int8 factors reorder near-ties but keep the sets close
+    overlap = np.mean([
+        len(set(np.asarray(full.indices)[i]) &
+            set(np.asarray(q8.indices)[i])) / 10
+        for i in range(8)])
+    assert overlap >= 0.8, overlap
+    np.testing.assert_allclose(np.asarray(q8.scores),
+                               np.asarray(full.scores),
+                               rtol=0.05, atol=0.05)
+
+
+def test_project_rows_inverts_row_factor_identity():
+    """U = A V diag(1/s): projecting the training rows recovers factor
+    rows whose top-k matches querying with the stored u rows."""
+    state = STATES[0]
+    rows = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (16 * 3, N)))
+    snap = ServingSnapshot.from_state(state, keep_u=True)
+    proj = ranker.project_rows(snap, jnp.asarray(rows[:4]))
+    assert proj.shape == (4, K)
+    direct = ranker.user_queries(snap, [0, 1, 2, 3])
+    np.testing.assert_allclose(np.asarray(proj), np.asarray(direct),
+                               rtol=0.2, atol=0.2)
+
+
+def test_project_rows_int8_close_to_f32():
+    snap = ServingSnapshot.from_state(STATES[0])
+    snap8 = ServingSnapshot.from_state(STATES[0], quantize=True)
+    rows = jax.random.normal(KEY, (5, N))
+    p32 = np.asarray(ranker.project_rows(snap, rows))
+    p8 = np.asarray(ranker.project_rows(snap8, rows))
+    np.testing.assert_allclose(p8, p32, rtol=0.1,
+                               atol=0.05 * np.abs(p32).max())
+
+
+def test_user_queries_requires_keep_u():
+    snap = ServingSnapshot.from_state(STATES[0])
+    with pytest.raises(ValueError, match="keep_u"):
+        ranker.user_queries(snap, [0])
+
+
+def test_score_topk_validates_inputs():
+    snap = ServingSnapshot.from_state(STATES[0])
+    with pytest.raises(ValueError, match="factor-space"):
+        ranker.score_topk(snap, jnp.zeros((2, K + 1)), 5)
+    with pytest.raises(ValueError, match="k_top"):
+        ranker.score_topk(snap, jnp.zeros((2, K)), 0)
+    with pytest.raises(ValueError, match="k_top"):
+        ranker.score_topk(snap, jnp.zeros((2, K)), N + 1)
+    with pytest.raises(ValueError, match="columns"):
+        ranker.project_rows(snap, jnp.zeros((2, N + 3)))
+
+
+def test_sharded_ranker_bitwise_subprocess():
+    """8 forced devices: the sharded ranker (per-device fused top-k +
+    device-major all-gather merge) is bit-identical to the dense path,
+    f32 and int8 alike, and auto picks it through the front door."""
+    out = run_forced_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.api import (ServeTopKConfig, SolveConfig,
+                                    serve_init, serve_topk, svd_init,
+                                    svd_update)
+        from repro.serve import ServingSnapshot, ranker
+        from repro.stream import shard_state
+
+        n, d, k = 1000, 8, 12
+        cfg = SolveConfig(method="random", truncate_rank=k, num_blocks=d,
+                          stream_backend="single")
+        a = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (64, n)))
+        state = svd_update(svd_init(n, cfg), a, cfg).state
+        queries = jax.random.normal(jax.random.PRNGKey(1), (7, k))
+
+        dense = ranker.score_topk(
+            ServingSnapshot.from_state(state), queries, 9)
+        sharded = ranker.score_topk(
+            ServingSnapshot.from_state(shard_state(state)), queries, 9,
+            sharded=True)
+        assert np.array_equal(np.asarray(dense.scores),
+                              np.asarray(sharded.scores))
+        assert np.array_equal(np.asarray(dense.indices),
+                              np.asarray(sharded.indices))
+
+        d8 = ranker.score_topk(
+            ServingSnapshot.from_state(state, quantize=True), queries, 9)
+        s8 = ranker.score_topk(
+            ServingSnapshot.from_state(shard_state(state), quantize=True),
+            queries, 9, sharded=True)
+        assert np.array_equal(np.asarray(d8.scores), np.asarray(s8.scores))
+        assert np.array_equal(np.asarray(d8.indices),
+                              np.asarray(s8.indices))
+
+        handle = serve_init(state, ServeTopKConfig(k_top=9))
+        assert handle.plan.backend == "shard_map", handle.plan.backend
+        res = serve_topk(handle, queries)
+        assert np.array_equal(np.asarray(res.scores),
+                              np.asarray(dense.scores))
+        assert np.array_equal(np.asarray(res.indices),
+                              np.asarray(dense.indices))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# front door: ServeTopKConfig + serve_init/serve_topk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kwargs, field", [
+    (dict(batch_size=0), "batch_size"),
+    (dict(k_top=0), "k_top"),
+    (dict(block_n=100), "block_n"),
+    (dict(block_n=0), "block_n"),
+    (dict(serve_backend="tpu_pod"), "serve_backend"),
+    (dict(num_blocks=0), "num_blocks"),
+    (dict(memory_budget_bytes=0), "memory_budget_bytes"),
+])
+def test_invalid_single_field_serve_config(kwargs, field):
+    with pytest.raises(ValueError, match=field):
+        ServeTopKConfig(**kwargs)
+
+
+def test_invalid_cross_field_serve_config_names_both_fields():
+    with pytest.raises(ValueError) as e:
+        ServeTopKConfig(k_top=600, block_n=512)
+    msg = str(e.value)
+    assert "k_top" in msg and "block_n" in msg
+    # the documented escape hatches really are valid
+    ServeTopKConfig(k_top=600, block_n=640)
+    ServeTopKConfig(k_top=600, block_n=512, use_kernel=False)
+
+
+def test_serve_init_rejects_num_blocks_mismatch():
+    with pytest.raises(ValueError, match="num_blocks"):
+        serve_init(STATES[0], ServeTopKConfig(num_blocks=D + 1))
+
+
+def test_serve_handle_end_to_end_single_device():
+    handle = serve_init(STATES[0], ServeTopKConfig(batch_size=8, k_top=6))
+    assert handle.plan.backend == "single"
+    assert handle.plan.strategy == "serve_fused"
+    assert handle.config.num_blocks == D
+    assert handle.version == 0
+
+    queries = jax.random.normal(KEY, (4, K))
+    res = serve_topk(handle, queries)
+    want = ranker.score_topk(handle.read(), queries, 6)
+    np.testing.assert_array_equal(np.asarray(res.scores),
+                                  np.asarray(want.scores))
+
+    # publish an ingest between waves: fresh version, fresh factors
+    handle.commit(STATES[1])
+    assert handle.version == 1
+    res2 = serve_topk(handle, queries, k_top=3)
+    assert res2.version == 1 and res2.scores.shape == (4, 3)
+
+    # the R7 plan priced exactly this path
+    assert handle.plan.peak_bytes == planner.serving_bytes(
+        N, K, 8, 6, num_blocks=D)
+
+
+def test_serve_topk_validates_waves():
+    handle = serve_init(STATES[0], ServeTopKConfig(batch_size=4))
+    with pytest.raises(ValueError, match="batch_size=4"):
+        serve_topk(handle, jnp.zeros((5, K)))
+    with pytest.raises(ValueError, match="factor-space"):
+        serve_topk(handle, jnp.zeros((K,)))
+
+
+def test_serve_commit_rejects_universe_change():
+    handle = serve_init(STATES[0])
+    other = svd_update(svd_init(N * 2, CFG),
+                       np.ones((8, N * 2), np.float32), CFG).state
+    with pytest.raises(ValueError, match="universe"):
+        handle.commit(other)
+
+
+def test_serve_overrides_build_config():
+    handle = serve_init(STATES[0], k_top=3, quantize=True)
+    assert handle.config.k_top == 3
+    assert handle.read().quantized
+    assert handle.plan.estimates["serve_factors"] == \
+        planner.serve_factor_bytes(STATES[0].v.shape[0], K, quantized=True)
+
+
+# ---------------------------------------------------------------------------
+# stream/decay.py
+# ---------------------------------------------------------------------------
+
+def test_decay_half_life_is_exact():
+    assert decay_from_timestamps(1000.0, 1000.0 - 60.0, 60.0) == 0.5
+    assert decay_from_timestamps(1000.0, 1000.0 - 120.0, 60.0) == 0.25
+    assert decay_from_timestamps(500.0, 500.0, 60.0) == 1.0
+
+
+def test_decay_composes_over_gaps():
+    h = 37.0
+    one = decay_from_timestamps(80.0, 0.0, h)
+    two = (decay_from_timestamps(30.0, 0.0, h)
+           * decay_from_timestamps(80.0, 30.0, h))
+    assert one == pytest.approx(two, rel=1e-12)
+
+
+def test_decay_clock_skew_never_amplifies():
+    assert decay_from_timestamps(100.0, 250.0, 60.0) == 1.0
+
+
+def test_decay_extreme_gap_stays_valid_for_solve_config():
+    d = decay_from_timestamps(0.0, -1e12, 1.0)
+    assert 0.0 < d <= 1.0
+    # the produced scalar always satisfies the front-door contract
+    SolveConfig(truncate_rank=4, history_decay=d)
+    SolveConfig(truncate_rank=4,
+                history_decay=decay_from_timestamps(10.0, 0.0, 5.0))
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(now=float("nan"), t_batch=0.0, half_life=1.0),
+    dict(now=0.0, t_batch=float("inf"), half_life=1.0),
+    dict(now=0.0, t_batch=0.0, half_life=0.0),
+    dict(now=0.0, t_batch=0.0, half_life=-3.0),
+])
+def test_decay_rejects_bad_inputs(kwargs):
+    with pytest.raises(ValueError):
+        decay_from_timestamps(**kwargs)
