@@ -13,6 +13,11 @@ the name, null when the row has no shape), ``us_per_call``, ``rel_err``
 (the row's relative error / e_sigma when it reports one, else null) and
 the raw ``derived`` string.  Every CI benchmark leg gates its JSON with
 ``scripts/check_bench_json.py`` and uploads it as an artifact.
+
+Each section additionally emits one ``obs_wall_<section>`` record: the
+section's wall time, routed through the obs metrics registry
+(``bench_section_wall_seconds{section=...}``), plus any compiled peak
+bytes the obs drift monitor measured while the section ran.
 """
 from __future__ import annotations
 
@@ -148,6 +153,34 @@ _RUNNERS = {
 }
 
 
+def _timed_section(section: str, rows, full: bool):
+    """Run one section with its wall time routed through the obs
+    metrics registry (``bench_section_wall_seconds{section=...}``) —
+    without flipping the global obs gate, so observe-off benchmark
+    numbers stay the observe-off numbers.  Returns ``(wall_seconds,
+    derived)`` where derived also carries any compiled peak bytes the
+    obs drift monitor measured while the section ran (sections that
+    exercise observe-on paths populate ``drift_measured_bytes``)."""
+    from repro import obs
+    from repro.obs import clock
+
+    reg = obs.registry()
+    before = set(reg.gauges_with_prefix("drift_measured_bytes"))
+    t0 = clock.now()
+    _RUNNERS[section](rows, full)
+    wall = clock.now() - t0
+    reg.gauge_set("bench_section_wall_seconds", wall,
+                  labels={"section": section})
+    derived = f"wall_s={wall:.3f};source=obs.metrics"
+    for k, v in reg.gauges_with_prefix("drift_measured_bytes").items():
+        if k in before:
+            continue
+        # drift_measured_bytes{rule="R7",site="dense"} -> peak_R7_dense_b
+        tag = "_".join(re.findall(r'"([^"]+)"', k)) or "measured"
+        derived += f";peak_{tag}_b={int(v)}"
+    return wall, derived
+
+
 def main() -> None:
     argv = sys.argv[1:]
     full = "--full" in argv
@@ -178,9 +211,11 @@ def main() -> None:
     records = []
     for section in sections:
         rows = []
-        _RUNNERS[section](rows, full)
+        wall, drift = _timed_section(section, rows, full)
         records.extend(_record(section, name, us, derived)
                        for name, us, derived in rows)
+        records.append(_record(section, f"obs_wall_{section}",
+                               wall * 1e6, drift))
 
     print("\nname,us_per_call,derived")
     for r in records:

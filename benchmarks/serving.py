@@ -25,9 +25,11 @@ import time
 import numpy as np
 import jax
 
+from repro import obs
 from repro.core import sparse
 from repro.core.api import (ServeTopKConfig, SolveConfig, serve_init,
                             serve_topk, svd_init, svd_update)
+from repro.serve import ranker as ranker_mod
 from repro.kernels import ref as kref
 from repro.kernels import topk_score as tks
 
@@ -145,6 +147,34 @@ def run(universes=(200_000,), rank=RANK, batch=BATCH, k_top=K_TOP,
         rel = float(np.abs(np.asarray(q8.scores)
                            - np.asarray(full.scores)).max() / denom)
 
+        # -- obs disabled-mode overhead: serve_topk (whose only obs
+        # cost is one enabled() check) vs the direct scoring path the
+        # serving engine shipped with, interleaved A/B on the now-quiet
+        # handle.  min-of-rounds p99 keeps the <1% CI gate stable
+        # against scheduler jitter.
+        assert not obs.enabled(), "obs must stay off for the A/B"
+        ab_waves = max(waves, 100)
+        base_p99s, off_p99s = [], []
+        for _ in range(3):
+            base_lat, off_lat = [], []
+            for w in range(ab_waves):
+                q = qs[w % len(qs)]
+                t0 = time.perf_counter()
+                r = ranker_mod.score_topk(
+                    handle.read(), q, k_top, block_n=BLOCK_N,
+                    sharded=handle.plan.backend == "shard_map",
+                    use_kernel=handle.config.use_kernel)
+                jax.block_until_ready(r.scores)
+                base_lat.append(time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                r = serve_topk(handle, q)
+                jax.block_until_ready(r.scores)
+                off_lat.append(time.perf_counter() - t0)
+            base_p99s.append(float(np.percentile(base_lat, 99) * 1e6))
+            off_p99s.append(float(np.percentile(off_lat, 99) * 1e6))
+        p99_base = min(base_p99s)
+        p99_off = min(off_p99s)
+
         # -- R7: plan peak vs the hand-computed closed form --
         width = -(-n // blocks)
         n_pad = blocks * width
@@ -159,6 +189,7 @@ def run(universes=(200_000,), rank=RANK, batch=BATCH, k_top=K_TOP,
                    f";fused_oracle_match={match}"
                    f";int8_overlap={overlap:.3f};rel_err_topk={rel:.3e}"
                    f";r7_peak_b={peak};r7_expected_b={expected}"
+                   f";p99_base_us={p99_base:.1f};p99_off_us={p99_off:.1f}"
                    f";ingest_commits={commits[0]}"
                    f";served_version={final_version}")
         out.append({"name": f"serve_topk_{batch}x{n}",
@@ -168,7 +199,8 @@ def run(universes=(200_000,), rank=RANK, batch=BATCH, k_top=K_TOP,
                   f"{p50:8.1f}us p99 {p99:8.1f}us | {commits[0]} ingests "
                   f"published | fused==oracle: {bool(match)} | int8 "
                   f"overlap {overlap:.2f} | R7 {peak:,}B "
-                  f"(expected {expected:,}B)", flush=True)
+                  f"(expected {expected:,}B) | obs-off p99 "
+                  f"{p99_off:.0f}us vs base {p99_base:.0f}us", flush=True)
     return out
 
 

@@ -1,6 +1,6 @@
 """Top-k serving under live ingest: the recommender front-end loop.
 
-    PYTHONPATH=src python examples/serving_topk.py
+    PYTHONPATH=src python examples/serving_topk.py [--observe]
 
 A serving endpoint answers request waves against the current snapshot
 while an ingest thread keeps folding fresh interaction batches into the
@@ -14,6 +14,11 @@ The endpoint then "crashes": the last checkpointed STATE is restored,
 a new handle is served from it, and the answers match the pre-crash
 endpoint exactly — snapshots are derived data, only the state needs
 durability.
+
+``--observe`` turns on `repro.obs` for the serve-under-ingest loop:
+live `handle.metrics()` (snapshot version/staleness, request counters,
+p50/p99 latency, R7 drift ratio) print during the run, and the
+Prometheus serve-side metric families print at the end.
 """
 import tempfile
 import threading
@@ -35,9 +40,12 @@ def batch(i: int) -> sparse.COOMatrix:
         seed=40 + i)
 
 
-def main():
+def main(observe: bool = False):
+    if observe:
+        from repro import obs
+        obs.enable()
     cfg = SolveConfig(method="none", truncate_rank=16, num_blocks=8,
-                      stream_backend="single")
+                      stream_backend="single", observe=observe)
     state = svd_init(N, cfg)
     state = svd_update(state, batch(0), cfg).state
 
@@ -74,6 +82,15 @@ def main():
         res = serve_topk(handle, queries)  # one wave on the final version
         print(f"\nanswered {waves} request waves during {BATCHES - 1} "
               f"ingests; final snapshot version={res.version}")
+        if observe:
+            m = handle.metrics()
+            drift = {k: round(v, 3) for k, v in m["drift_ratios"].items()}
+            print(f"live endpoint metrics: version={m['snapshot_version']}"
+                  f" age={m['snapshot_age_s'] * 1e3:.0f}ms "
+                  f"requests={m['serve_requests_total']:.0f} "
+                  f"p50={m['serve_latency_us_p50']:.0f}us "
+                  f"p99={m['serve_latency_us_p99']:.0f}us "
+                  f"drift={drift}")
         print(f"user 0 top-5 items: {np.asarray(res.indices)[0].tolist()}")
 
         # --- crash: rebuild the endpoint from the checkpointed state --
@@ -108,6 +125,14 @@ def main():
     print(f"cold-start (projected raw rows) top-5: "
           f"{np.asarray(res3.indices).tolist()}")
 
+    if observe:
+        from repro import obs
+        print("\n--- observability (--observe): serve-side families ---")
+        for line in obs.export_text().splitlines():
+            if "serve" in line or "snapshot" in line or "drift" in line:
+                print(f"  {line}")
+
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(observe="--observe" in sys.argv)

@@ -1,6 +1,6 @@
 """Streaming SVD: a minimal "daily update" service loop.
 
-    PYTHONPATH=src python examples/streaming_svd.py
+    PYTHONPATH=src python examples/streaming_svd.py [--observe]
 
 A day of new user-item interactions arrives as a batch of sparse rows;
 ``svd_update`` folds it into the running truncated factorization by
@@ -9,6 +9,10 @@ the state is checkpointed after every day.  Mid-stream the example
 "crashes", restores the last checkpoint, and continues — the resumed
 stream is bit-identical to the uninterrupted one (the state carries its
 own PRNG chain, so repairs and sketches replay exactly).
+
+``--observe`` turns on the observability layer (`repro.obs`): the run
+records ingest/merge/window spans, drift gauges against the R5/R6
+closed forms, and prints the span summary + drift ratios at the end.
 
 The second half switches to high-rate ticks: ``svd_stream`` consumes a
 GENERATOR of mini-batches lazily and, once the rank is steady, groups
@@ -35,9 +39,12 @@ def day_batch(day: int) -> sparse.COOMatrix:
                                 weighted=True), seed=100 + day)
 
 
-def main():
+def main(observe: bool = False):
+    if observe:
+        from repro import obs
+        obs.enable()
     cfg = SolveConfig(method="neighbor_random", truncate_rank=32,
-                      oversample=16, num_blocks=8)
+                      oversample=16, num_blocks=8, observe=observe)
 
     # Capacity planning before any data exists: rule R5 answers "does
     # one day's ingest fit this device" from the batch shape alone.
@@ -114,6 +121,19 @@ def main():
     print(f"scan windows bit-identical to the per-batch loop: {bitwise}")
     assert bitwise
 
+    if observe:
+        from repro import obs
+        print("\n--- observability (--observe) ---")
+        print("span summary (name, calls, total ms) for the scan run:")
+        for name, count, total_us in res.diagnostics.span_summary:
+            print(f"  {name:<18} x{count:<4} {total_us / 1e3:9.1f}ms")
+        ratios = {k: round(v, 3) for k, v in obs.drift_ratios().items()}
+        print(f"measured/planned peak-byte drift: {ratios}")
+        print(f"compile {res.diagnostics.compile_time_s:.2f}s + run "
+              f"{res.diagnostics.run_time_s:.2f}s = wall "
+              f"{res.diagnostics.wall_time_s:.2f}s")
+
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(observe="--observe" in sys.argv)

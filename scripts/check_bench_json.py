@@ -2,7 +2,7 @@
 """The one JSON sanity gate behind every benchmark CI leg.
 
     python scripts/check_bench_json.py OUT.json [--section NAME]
-        [--min-records N]
+        [--min-records N] [--check-obs TRACE.json]
 
 Replaces the per-leg inline heredocs that used to live in
 .github/workflows/ci.yml: every leg runs ``benchmarks.run ... --json
@@ -29,7 +29,11 @@ OUT.json`` and then this script, which asserts
   - ``serving``         — every ``serve_topk_*`` row sustains qps > 0
     with a recorded p99, the fused kernel matched the oracle
     bit-for-bit on live factors, and the plan's serving peak equals
-    the hand-computed R7 closed form.
+    the hand-computed R7 closed form;
+* with ``--check-obs TRACE.json``: the trace artifact is schema-valid
+  Chrome/Perfetto trace-event JSON covering the ingest/merge/serve/
+  snapshot span taxonomy, and the serving rows' interleaved A/B shows
+  disabled-mode serving p99 within 1% of the direct-path baseline.
 
 Exit code 0 on success; an AssertionError (non-zero exit) otherwise —
 CI-friendly either way.
@@ -136,6 +140,57 @@ SECTION_CHECKS = {
     "serving": check_serving,
 }
 
+# span categories an observe-on streaming + serving run must cover
+# (category = span name before the first dot)
+_TRACE_REQUIRED_CATS = {"ingest", "merge", "serve", "snapshot"}
+
+
+def check_obs(recs, trace_path: str) -> None:
+    """The observability gate: the trace artifact is schema-valid
+    Chrome/Perfetto trace-event JSON covering the ingest/merge/serve/
+    snapshot span taxonomy, and disabled-mode serving p99 regresses
+    < 1% against the direct scoring path (the pre-obs baseline), per
+    the interleaved A/B ``benchmarks/serving.py`` records."""
+    with open(trace_path) as f:
+        doc = json.load(f)
+    assert isinstance(doc, dict) and isinstance(
+        doc.get("traceEvents"), list), \
+        f"{trace_path}: not a trace-event JSON object"
+    evs = doc["traceEvents"]
+    assert evs, f"{trace_path}: empty traceEvents"
+    cats = set()
+    for ev in evs:
+        assert isinstance(ev, dict), f"{trace_path}: non-dict event {ev!r}"
+        missing = [k for k in ("name", "ph", "pid", "tid") if k not in ev]
+        assert not missing, f"{trace_path}: event lacks {missing}: {ev!r}"
+        assert ev["ph"] in ("M", "X", "i"), \
+            f"{trace_path}: unexpected phase {ev['ph']!r}"
+        if ev["ph"] in ("X", "i"):
+            assert isinstance(ev.get("ts"), (int, float)) and ev["ts"] >= 0
+        if ev["ph"] == "X":
+            assert isinstance(ev.get("dur"), (int, float)) and ev["dur"] >= 0
+            cats.add(str(ev["name"]).split(".", 1)[0])
+    assert any(ev["ph"] == "M" for ev in evs), \
+        f"{trace_path}: no process_name metadata event"
+    lacking = _TRACE_REQUIRED_CATS - cats
+    assert not lacking, \
+        (f"{trace_path}: trace covers span categories {sorted(cats)} but "
+         f"lacks {sorted(lacking)}")
+
+    serve = [r for r in recs if r["name"].startswith("serve_topk")
+             and "p99_off_us=" in r["derived"]]
+    assert serve, "--check-obs needs serve_topk_* rows with the obs A/B"
+    for r in serve:
+        base = _derived_float(r["derived"], "p99_base_us")
+        off = _derived_float(r["derived"], "p99_off_us")
+        assert off <= base * 1.01, \
+            (f"{r['name']}: disabled-mode serving p99 {off:.1f}us is "
+             f">1% above the direct-path baseline {base:.1f}us — the "
+             f"obs gate is not free")
+    print(f"{trace_path} OK ({len(evs)} events, span categories: "
+          f"{', '.join(sorted(cats))}; obs-off p99 within 1% on "
+          f"{len(serve)} serving row(s))")
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -143,6 +198,10 @@ def main(argv=None) -> int:
     ap.add_argument("--section", default=None,
                     help="require every record to belong to this section")
     ap.add_argument("--min-records", type=int, default=1)
+    ap.add_argument("--check-obs", default=None, metavar="TRACE.json",
+                    help="also validate this Chrome/Perfetto trace "
+                         "artifact and the <1%% disabled-mode serving "
+                         "p99 overhead recorded by the serving section")
     args = ap.parse_args(argv)
 
     with open(args.json_path) as f:
@@ -166,6 +225,9 @@ def main(argv=None) -> int:
         check = SECTION_CHECKS.get(section)
         if check is not None:
             check([r for r in recs if r["section"] == section])
+
+    if args.check_obs is not None:
+        check_obs(recs, args.check_obs)
 
     print(f"{args.json_path} OK ({len(recs)} records, "
           f"sections: {', '.join(sections)})")

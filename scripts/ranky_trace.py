@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Capture a Chrome/Perfetto trace of a streaming + serving run.
+
+Runs a representative workload with observability on — ``svd_stream``
+over bucketed windows, then ``serve_topk`` request waves against a live
+handle — and writes:
+
+* a trace-event JSON (open at https://ui.perfetto.dev or
+  chrome://tracing) covering window execution (bucket signature,
+  batches, compile-vs-execute flag), per-batch ingests, merge_svd,
+  snapshot stage/publish and serving waves;
+* optionally a metrics export (Prometheus text via ``--metrics``,
+  JSON if the path ends in .json) including the measured-vs-planned
+  drift gauges for R5/R6/R7.
+
+Usage:
+    PYTHONPATH=src python scripts/ranky_trace.py trace.json
+    PYTHONPATH=src python scripts/ranky_trace.py trace.json \
+        --metrics metrics.prom --batches 24 --waves 32
+
+The workload is synthetic and seeded — the point is the trace shape,
+not the factors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("out", help="trace-event JSON output path")
+    ap.add_argument("--metrics", default=None,
+                    help="also export metrics (Prometheus text, or JSON "
+                         "when the path ends in .json)")
+    ap.add_argument("--batches", type=int, default=12,
+                    help="streaming batches to ingest (default 12)")
+    ap.add_argument("--waves", type=int, default=16,
+                    help="serving request waves (default 16)")
+    ap.add_argument("--rows", type=int, default=32,
+                    help="rows per batch (default 32)")
+    ap.add_argument("--n", type=int, default=2048,
+                    help="column universe (default 2048)")
+    ap.add_argument("--rank", type=int, default=8,
+                    help="streaming truncate_rank (default 8)")
+    args = ap.parse_args(argv)
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro import obs
+    from repro.core import api
+
+    obs.enable()
+    rng = np.random.default_rng(0)
+
+    cfg = api.SolveConfig(method="none", truncate_rank=args.rank,
+                          observe=True)
+    batches = (rng.normal(size=(args.rows, args.n)).astype(np.float32)
+               for _ in range(args.batches))
+    res = api.svd_stream(batches, cfg)
+    print(f"ingested {args.batches} batches -> rank {res.state.rank} "
+          f"(compile {res.diagnostics.compile_time_s:.2f}s, "
+          f"run {res.diagnostics.run_time_s:.2f}s)")
+
+    handle = api.serve_init(res.state,
+                            api.ServeTopKConfig(batch_size=8, k_top=5,
+                                                use_kernel=False))
+    for w in range(args.waves):
+        q = jnp.asarray(rng.normal(size=(8, args.rank)).astype(np.float32))
+        out = api.serve_topk(handle, q)
+        jax.block_until_ready(out.scores)
+        if w == args.waves // 2:
+            # one mid-run commit so the trace shows stage/publish
+            handle.commit(res.state)
+    print(f"served {args.waves} waves; endpoint metrics: "
+          f"{handle.metrics()}")
+
+    n_ev = obs.write_chrome_trace(args.out)
+    print(f"wrote {n_ev} trace events -> {args.out} "
+          f"(open at https://ui.perfetto.dev)")
+    ratios = obs.drift_ratios()
+    print(f"drift ratios (measured/planned peak bytes): "
+          f"{ {k: round(v, 3) for k, v in ratios.items()} }")
+
+    if args.metrics:
+        if args.metrics.endswith(".json"):
+            with open(args.metrics, "w") as f:
+                json.dump(obs.export_json(), f, indent=2)
+        else:
+            with open(args.metrics, "w") as f:
+                f.write(obs.export_text())
+        print(f"wrote metrics -> {args.metrics}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

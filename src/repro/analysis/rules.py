@@ -1,13 +1,14 @@
 """The ranky-lint rule set: the repo's hot-path JAX discipline, written
-down as RL101–RL107.
+down as RL101–RL108.
 
 Every rule here encodes a regression class this repo has actually
 shipped-then-fixed (see ISSUE/ROADMAP history): per-ingest host syncs
 (RL101), PRNG chains losing a fold_in (RL102), collectives outside
 their shard_map region (RL103), accidental densification (RL104),
 retrace/recompile hazards (RL105), unregistered pytree dataclasses
-crossing a jit boundary (RL106), and per-iteration host syncs in the
-serving/ingest hot loops (RL107).
+crossing a jit boundary (RL106), per-iteration host syncs in the
+serving/ingest hot loops (RL107), and ad-hoc timing/printing that
+bypasses the observability clock/logger (RL108).
 
 Precision over recall: a rule stays silent when it cannot *prove* the
 pattern from the AST (variable axis names, cross-module calls, values
@@ -568,3 +569,53 @@ class HostSyncInHotLoop(Rule):
             if not _is_static_expr(node.args[0], fi, m):
                 return f"{name}() on a potential device value"
         return None
+
+
+# ---------------------------------------------------------------------------
+# RL108 — ad-hoc timing/printing outside the observability layer
+# ---------------------------------------------------------------------------
+
+_OBS_SCOPE_DIRS = {"core", "serve", "stream"}
+_RAW_CLOCKS = {
+    "time.time": "obs clock (repro.obs.clock.wall)",
+    "time.perf_counter": "obs clock (repro.obs.clock.now)",
+}
+
+
+@register_rule
+class RawClockOrPrint(Rule):
+    id = "RL108"
+    name = "raw-clock-or-print"
+    description = ("direct time.time()/time.perf_counter()/print() in "
+                   "src/repro/{stream,serve,core} outside obs/ — timing "
+                   "and logging must route through the observability "
+                   "clock (repro.obs.clock) and structured "
+                   "spans/metrics, or traces lose their one shared "
+                   "timebase and output bypasses the ring buffer")
+
+    def check(self, m: ModuleInfo, project: ProjectContext
+              ) -> Iterator[Finding]:
+        # Scoped to the production subsystems; the obs package IS the
+        # clock/logger, and benchmarks/tests/examples time and print
+        # freely by design.
+        parts = m.path.replace("\\", "/").split("/")
+        dirs = set(parts[:-1])
+        if not (_OBS_SCOPE_DIRS & dirs) or "obs" in dirs:
+            return
+        for node in ast.walk(m.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = m.resolve_or_name(node.func)
+            if name in _RAW_CLOCKS:
+                yield self.finding(
+                    m, node,
+                    f"{name}() bypasses the observability timebase — "
+                    f"route through the {_RAW_CLOCKS[name]} so spans, "
+                    f"metrics and Diagnostics share ONE clock")
+            elif name == "print":
+                yield self.finding(
+                    m, node,
+                    "print() in a production subsystem bypasses the "
+                    "observability layer — record an obs span/event/"
+                    "metric (repro.obs) so output is structured, gated "
+                    "and exportable")

@@ -46,13 +46,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
 from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.obs import clock
 from repro.core import planner, ranky, sparse
 from repro.serve import ranker as ranker_mod
 from repro.serve import snapshot as snapshot_mod
@@ -139,6 +140,11 @@ class SolveConfig:
       adaptive_oversample``) instead of the static ``k + oversample``;
       a width change re-buckets (and retraces) the scan.
     * ``memory_budget_bytes`` — planner budget (default 4 GiB).
+    * ``observe`` — switch on the runtime observability layer
+      (``repro.obs``: span traces, metrics, plan-vs-measured drift) for
+      this and every later call; sticky process-wide, off by default.
+      Disabled mode costs one boolean check per instrumentation point —
+      zero extra dispatches, bit-identical results.
     * ``key`` — PRNG key; ``None`` means ``default_key()``.
     """
 
@@ -162,6 +168,7 @@ class SolveConfig:
     window: Optional[int] = None
     adaptive_width: bool = False
     memory_budget_bytes: Optional[int] = None
+    observe: bool = False
     key: Optional[jax.Array] = None
 
     def __post_init__(self):
@@ -304,6 +311,15 @@ class Diagnostics:
     at any scale (those repair precisely the lonely rows); for
     ``neighbor`` it is derived from one host-side repair pass and is
     ``None`` when M > 4096 (the pass needs the O(M^2) adjacency).
+
+    ``wall_time_s = compile_time_s + run_time_s``: the compile side is
+    the call's share of jax tracing/lowering/backend-compile time (the
+    ``repro.obs.clock`` jax.monitoring probe), so a first call reports
+    a large ``compile_time_s`` and a warm call ~0 — benchmark deltas
+    compare ``run_time_s``.  ``drift_ratios`` / ``span_summary`` are
+    populated only when observability is on (``SolveConfig.observe`` or
+    ``obs.enable()``): measured/planned peak-byte ratios per rule, and
+    ``(name, count, total_us)`` span rollups for this call.
     """
 
     lonely_rows_per_block: Tuple[int, ...]
@@ -312,6 +328,10 @@ class Diagnostics:
     strategy: str
     estimated_peak_bytes: int
     wall_time_s: float
+    compile_time_s: float = 0.0
+    run_time_s: float = 0.0
+    drift_ratios: Optional[Dict[str, float]] = None
+    span_summary: Optional[Tuple[Tuple[str, int, float], ...]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -536,6 +556,38 @@ def _reject_stream_knobs(config: SolveConfig, fn: str) -> SolveConfig:
     return config
 
 
+class _CallTimer:
+    """Wall/compile/run split + obs digests for one front-door call.
+
+    The jax.monitoring compile probe is installed unconditionally (it
+    is idempotent and host-only): ``compile_time_s`` must be honest
+    even with observability off.  ``config.observe=True`` stickily
+    enables the full obs layer.  The split is clamped so listener
+    noise from concurrent threads can never drive ``run_time_s``
+    negative.
+    """
+
+    def __init__(self, config: Optional[SolveConfig] = None):
+        if config is not None and config.observe and not obs.enabled():
+            obs.enable()
+        clock.install_compile_probe()
+        self._e0 = len(obs.trace.events()) if obs.enabled() else 0
+        self._t0 = clock.now()
+        self._c0 = clock.compile_seconds()
+
+    def finish(self) -> Dict[str, Any]:
+        """The Diagnostics timing/obs kwargs for this call."""
+        wall = clock.now() - self._t0
+        comp = min(wall, max(0.0, clock.compile_seconds() - self._c0))
+        out: Dict[str, Any] = dict(wall_time_s=wall, compile_time_s=comp,
+                                   run_time_s=wall - comp)
+        if obs.enabled():
+            out["drift_ratios"] = obs.drift_ratios()
+            out["span_summary"] = obs.trace.span_summary(
+                obs.trace.events()[self._e0:])
+        return out
+
+
 def svd(a: MatrixInput, config: Optional[SolveConfig] = None, *,
         mesh=None, block_axes=None, **overrides) -> SVDResult:
     """Distributed Ranky SVD of ``a`` — the one public entry point.
@@ -562,7 +614,7 @@ def svd(a: MatrixInput, config: Optional[SolveConfig] = None, *,
             f"mesh= was provided but config.backend={config.backend!r}; a "
             f"mesh only applies to backend='shard_map' (or 'auto')")
 
-    t0 = time.perf_counter()
+    timer = _CallTimer(config)
     d, note = _resolve_num_blocks(a, config, mesh, block_axes)
     spec = describe(a, d)
     if config.rank is not None and config.rank > spec.m:
@@ -591,23 +643,27 @@ def svd(a: MatrixInput, config: Optional[SolveConfig] = None, *,
     run_cfg = dataclasses.replace(config, num_blocks=d, backend=p.backend,
                                   rank=p.rank)
 
-    if p.backend == "single":
-        out = _run_single(a_norm, run_cfg)
-    elif p.backend == "hierarchical":
-        out = _run_hierarchical(a_norm, run_cfg,
-                                sketch_override=p.sketch_leaves)
-    elif p.backend == "shard_map":
-        if mesh is None:
-            if jax.device_count() != d:
-                raise ValueError(
-                    f"backend='shard_map' with no mesh= needs one device "
-                    f"per block: num_blocks={d} but device_count="
-                    f"{jax.device_count()}")
-            mesh = jax.make_mesh((d,), ("blocks",))
-            block_axes = ("blocks",)
-        out = _run_shard_map(a_norm, mesh, run_cfg, block_axes=block_axes)
-    else:  # pragma: no cover - planner only emits the three above
-        raise AssertionError(f"planner produced unknown backend {p.backend!r}")
+    with obs.span("svd.solve", backend=p.backend, strategy=p.strategy,
+                  m=spec.m, n=spec.n):
+        if p.backend == "single":
+            out = _run_single(a_norm, run_cfg)
+        elif p.backend == "hierarchical":
+            out = _run_hierarchical(a_norm, run_cfg,
+                                    sketch_override=p.sketch_leaves)
+        elif p.backend == "shard_map":
+            if mesh is None:
+                if jax.device_count() != d:
+                    raise ValueError(
+                        f"backend='shard_map' with no mesh= needs one "
+                        f"device per block: num_blocks={d} but "
+                        f"device_count={jax.device_count()}")
+                mesh = jax.make_mesh((d,), ("blocks",))
+                block_axes = ("blocks",)
+            out = _run_shard_map(a_norm, mesh, run_cfg,
+                                 block_axes=block_axes)
+        else:  # pragma: no cover - planner only emits the three above
+            raise AssertionError(
+                f"planner produced unknown backend {p.backend!r}")
 
     u, s = out[0], out[1]
     v = out[2] if config.want_right else None
@@ -618,7 +674,7 @@ def svd(a: MatrixInput, config: Optional[SolveConfig] = None, *,
     jax.block_until_ready((u, s) if v is None else (u, s, v))
     if v is not None:
         v = v[:spec.n]  # trim the adapter's zero-column padding back off
-    wall = time.perf_counter() - t0
+    timing = timer.finish()
 
     lonely = ranky.lonely_rows_per_block(a_norm, d)
     lonely_total = sum(lonely)
@@ -630,7 +686,7 @@ def svd(a: MatrixInput, config: Optional[SolveConfig] = None, *,
                                      spec.m),
         strategy=p.strategy,
         estimated_peak_bytes=p.estimated_peak_bytes,
-        wall_time_s=wall,
+        **timing,
     )
     return SVDResult(u=u, s=s, v=v, plan=p, diagnostics=diag)
 
@@ -783,11 +839,11 @@ def svd_update(state, delta, config: Optional[SolveConfig] = None,
             f"column universe has num_blocks={state.num_blocks}; the "
             f"universe is fixed at svd_init time")
 
-    t0 = time.perf_counter()
+    timer = _CallTimer(config)
     p = plan_update(delta, config, state=state)
     new_state, info = streaming.ingest(state, delta, config, p)
     jax.block_until_ready((new_state.u, new_state.s, new_state.v))
-    wall = time.perf_counter() - t0
+    timing = timer.finish()
 
     diag = Diagnostics(
         lonely_rows_per_block=info.lonely_rows_per_block,
@@ -795,7 +851,7 @@ def svd_update(state, delta, config: Optional[SolveConfig] = None,
         repaired_rows=info.repaired_rows,
         strategy=p.strategy,
         estimated_peak_bytes=p.estimated_peak_bytes,
-        wall_time_s=wall,
+        **timing,
     )
     v = new_state.trimmed_v() if config.want_right else None
     return SVDResult(u=new_state.u, s=new_state.s, v=v, plan=p,
@@ -837,7 +893,7 @@ def svd_stream(batches, config: Optional[SolveConfig] = None, *,
         first = next(it)
     except StopIteration:
         raise ValueError("svd_stream needs at least one batch")
-    t0 = time.perf_counter()
+    timer = _CallTimer(config)
     if state is None:
         n, d = _batch_universe(first)
         cfg0 = config if (d is None or config.num_blocks is not None) \
@@ -902,7 +958,7 @@ def svd_stream(batches, config: Optional[SolveConfig] = None, *,
             flush()
     flush()
     jax.block_until_ready((state.u, state.s, state.v))
-    wall = time.perf_counter() - t0
+    timing = timer.finish()
 
     diag = Diagnostics(
         lonely_rows_per_block=last_pb,
@@ -910,7 +966,7 @@ def svd_stream(batches, config: Optional[SolveConfig] = None, *,
         repaired_rows=state.repaired_rows_seen - base_repaired,
         strategy=last_plan.strategy,
         estimated_peak_bytes=last_plan.estimated_peak_bytes,
-        wall_time_s=wall)
+        **timing)
     v = state.trimmed_v() if config.want_right else None
     return SVDResult(u=state.u, s=state.s, v=v, plan=last_plan,
                      diagnostics=diag, state=state)
@@ -1022,6 +1078,31 @@ class ServeHandle:
                 f"handle to change universes")
         return self.buffer.commit(state)
 
+    def metrics(self) -> Dict[str, Any]:
+        """Live endpoint health, always available (obs on or off):
+        snapshot version + staleness from the buffer itself, plus — when
+        observability is on — the serve-side counters, latency quantiles
+        and R7 drift ratio from the obs registry."""
+        out: Dict[str, Any] = {
+            "snapshot_version": self.buffer.version,
+            "snapshot_age_s": self.buffer.age_seconds(),
+            "planned_peak_bytes": self.plan.estimated_peak_bytes,
+        }
+        if obs.enabled():
+            reg = obs.registry()
+            out["serve_requests_total"] = reg.counter_value(
+                "serve_requests_total")
+            out["serve_queries_total"] = reg.counter_value(
+                "serve_queries_total")
+            out["serve_latency_us_p50"] = reg.histogram_quantile(
+                "serve_latency_us", 0.5)
+            out["serve_latency_us_p99"] = reg.histogram_quantile(
+                "serve_latency_us", 0.99)
+            out["drift_ratios"] = {
+                k: v for k, v in obs.drift_ratios().items()
+                if k.startswith("R7")}
+        return out
+
 
 def _coerce_serve_config(config: Optional[ServeTopKConfig],
                          overrides: Dict[str, Any]) -> ServeTopKConfig:
@@ -1087,10 +1168,28 @@ def serve_topk(handle: ServeHandle, queries,
             f"wave of {queries.shape[0]} queries exceeds the planned "
             f"batch_size={cfg.batch_size}; split the wave or serve_init "
             f"with a larger batch_size")
-    return ranker_mod.score_topk(
-        handle.read(), queries,
-        cfg.k_top if k_top is None else k_top,
-        block_n=cfg.block_n,
-        sharded=handle.plan.backend == "shard_map",
-        use_kernel=cfg.use_kernel)
+    if not obs.enabled():
+        return ranker_mod.score_topk(
+            handle.read(), queries,
+            cfg.k_top if k_top is None else k_top,
+            block_n=cfg.block_n,
+            sharded=handle.plan.backend == "shard_map",
+            use_kernel=cfg.use_kernel)
+    snap = handle.read()
+    t0 = clock.now_us()
+    with obs.span("serve.topk", batch=int(queries.shape[0]),
+                  version=snap.version):
+        res = ranker_mod.score_topk(
+            snap, queries,
+            cfg.k_top if k_top is None else k_top,
+            block_n=cfg.block_n,
+            sharded=handle.plan.backend == "shard_map",
+            use_kernel=cfg.use_kernel,
+            plan_bytes=handle.plan.estimated_peak_bytes)
+    obs.counter_add("serve_requests_total")
+    obs.counter_add("serve_queries_total", float(queries.shape[0]))
+    obs.histogram_observe("serve_latency_us", clock.now_us() - t0)
+    obs.gauge_set("snapshot_version", snap.version)
+    obs.gauge_set("snapshot_age_seconds", handle.buffer.age_seconds())
+    return res
 

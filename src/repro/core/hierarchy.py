@@ -22,6 +22,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import ranky
 from repro.core import svd as lsvd
 
@@ -43,13 +44,17 @@ def merge_svd(p: jnp.ndarray, rank: int):
     carries the old and batch left vectors into the merged basis.
     """
     m, rtot = p.shape
-    u, s, wt = jnp.linalg.svd(p, full_matrices=False)
-    k = min(m, rtot)
-    if k < rank:
-        u = jnp.pad(u, ((0, 0), (0, rank - k)))
-        s = jnp.pad(s, (0, rank - k))
-        wt = jnp.pad(wt, ((0, rank - k), (0, 0)))
-    return u[:, :rank], s[:rank], wt[:rank].T
+    # The span is inert inside jit/scan tracing (trace_state_clean guard
+    # in obs.trace) — it records only for eager merges, e.g. the
+    # per-batch streaming ingest.
+    with obs.span("merge.svd", m=m, r_tot=rtot, rank=rank):
+        u, s, wt = jnp.linalg.svd(p, full_matrices=False)
+        k = min(m, rtot)
+        if k < rank:
+            u = jnp.pad(u, ((0, 0), (0, rank - k)))
+            s = jnp.pad(s, (0, rank - k))
+            wt = jnp.pad(wt, ((0, rank - k), (0, 0)))
+        return u[:, :rank], s[:rank], wt[:rank].T
 
 
 @partial(jax.jit, static_argnames=("rank",))

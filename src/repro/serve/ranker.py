@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.compat import shard_map_nocheck as shard_map
 from repro.kernels import ops
 from repro.kernels import ref as _ref
@@ -158,11 +159,18 @@ def score_topk(
     block_n: int = 512,
     sharded: bool = False,
     use_kernel: bool = True,
+    plan_bytes: Optional[int] = None,
 ) -> TopKResult:
     """Answer one request wave: top ``k_top`` items per query row.
 
     ``queries`` are factor-space rows (B, k) — use :func:`project_rows`
     for raw interaction deltas or :func:`user_queries` for known users.
+
+    ``plan_bytes`` (the R7 closed-form estimate, threaded down by
+    ``api.serve_topk``) arms the drift monitor when observability is
+    on: the compiled wave's measured peak is priced once per shape via
+    compile-only lowering — no extra dispatch — and recorded as the
+    ``drift_ratio{rule="R7"}`` gauge.
     """
     if queries.ndim != 2 or queries.shape[1] != snapshot.rank:
         raise ValueError(
@@ -184,8 +192,28 @@ def score_topk(
             # unused by the body; a (D, 1) placeholder keeps the
             # shard_map signature uniform without shipping n_pad floats
             scale_arg = jnp.zeros((snapshot.num_blocks, 1), jnp.float32)
+        if plan_bytes is not None and obs.enabled():
+            # memory_analysis on the SPMD jit reports PER-DEVICE sizes,
+            # matching serving_bytes(..., per_device=True) in the plan.
+            obs.observe_compiled(
+                "R7", lambda: fn, (qs, factors, scale_arg), plan_bytes,
+                component="total", label="sharded")
         vals, idx = fn(qs, factors, scale_arg)
         return TopKResult(vals, idx, snapshot.version)
+    if plan_bytes is not None and obs.enabled():
+        valid_n, off = snapshot.n, 0
+        if scale is None:
+            make = lambda: jax.jit(lambda q, f: _local_topk(
+                q, f, k_top, scale=None, valid_n=valid_n, index_offset=off,
+                block_n=block_n, use_kernel=use_kernel))
+            drift_args = (qs, factors)
+        else:
+            make = lambda: jax.jit(lambda q, f, sc: _local_topk(
+                q, f, k_top, scale=sc, valid_n=valid_n, index_offset=off,
+                block_n=block_n, use_kernel=use_kernel))
+            drift_args = (qs, factors, scale)
+        obs.observe_compiled("R7", make, drift_args, plan_bytes,
+                             component="total", label="dense")
     vals, idx = _local_topk(
         qs, factors, k_top,
         scale=scale, valid_n=snapshot.n, index_offset=0, block_n=block_n,

@@ -27,6 +27,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+from repro.obs import clock
 from repro.serve import kvquant
 from repro.stream.state import StreamingSVDState
 
@@ -121,6 +123,9 @@ class SnapshotBuffer:
         self._front = snapshot
         self._back: Optional[ServingSnapshot] = None
         self._lock = threading.Lock()
+        # Unconditional wall stamp (one host float): staleness must be
+        # answerable (ServeHandle.metrics) even with obs off.
+        self._published_at = clock.wall()
 
     def read(self) -> ServingSnapshot:
         """The current serving snapshot — always one consistent state."""
@@ -129,6 +134,11 @@ class SnapshotBuffer:
     @property
     def version(self) -> int:
         return self._front.version
+
+    def age_seconds(self) -> float:
+        """Seconds since the front snapshot was published — the
+        snapshot staleness ServeHandle.metrics reports."""
+        return clock.wall() - self._published_at
 
     def stage(self, state: StreamingSVDState, *,
               quantize: Optional[bool] = None,
@@ -143,11 +153,13 @@ class SnapshotBuffer:
             quantize = front.quantized
         if keep_u is None:
             keep_u = front.u_rows is not None
-        snap = ServingSnapshot.from_state(
-            state, quantize=quantize, keep_u=keep_u,
-            version=front.version + 1)
-        with self._lock:
-            self._back = snap
+        with obs.span("snapshot.stage", version=front.version + 1,
+                      quantize=quantize):
+            snap = ServingSnapshot.from_state(
+                state, quantize=quantize, keep_u=keep_u,
+                version=front.version + 1)
+            with self._lock:
+                self._back = snap
         return snap
 
     def publish(self) -> ServingSnapshot:
@@ -157,7 +169,11 @@ class SnapshotBuffer:
             if self._back is not None:
                 self._front = self._back
                 self._back = None
-            return self._front
+                self._published_at = clock.wall()
+        front = self._front
+        obs.event("snapshot.publish", version=front.version)
+        obs.gauge_set("snapshot_version", front.version)
+        return front
 
     def commit(self, state: StreamingSVDState, **stage_kw) -> ServingSnapshot:
         """stage + publish in one call — the per-ingest convenience."""

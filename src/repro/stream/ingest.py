@@ -71,6 +71,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.compat import shard_map_nocheck as shard_map
 from repro.core import hierarchy, randomized, ranky, sparse
 from repro.core import svd as lsvd
@@ -127,6 +128,31 @@ def _factor_batch(blocks, m_b: int, config, plan, k_batch: jax.Array):
     return u_b, panel_b
 
 
+def _ingest_math(a_norm, k_batch, s, v, *, d, m_b, config, plan):
+    """The device math of one single-host ingest — repair, batch
+    factorization, merge-and-truncate — WITHOUT the left-factor update
+    (``u`` grows with rows_seen; rule R5's closed form excludes it).
+
+    Split out so the drift monitor can lower+compile the SAME ops
+    (``jax.jit(functools.partial(_ingest_math, **statics))``) and ask
+    XLA for the measured peak of exactly what runs; :func:`ingest`
+    calls it EAGERLY, so op order — and therefore the result — is
+    bit-identical with observability on or off.
+    """
+    # Repair BEFORE factorization/truncation (the rank problem).
+    blocks = ranky.split_and_repair(a_norm, d, config.method, k_batch)
+
+    u_b, panel_b = _factor_batch(blocks, m_b, config, plan, k_batch)
+
+    # Merge-and-truncate: one hierarchy-style panel SVD of
+    # [V diag(decay*s) | B^T U_b], nothing bigger than (n_pad, k + r_b).
+    s_old = s * jnp.float32(config.history_decay)
+    p = jnp.concatenate([v * s_old[None, :], panel_b], axis=1)
+    k_new = min(config.truncate_rank, p.shape[1])
+    v_new, s_new, uk = hierarchy.merge_svd(p, k_new)  # uk: (k_old+r_b, k_new)
+    return blocks, u_b, v_new, s_new, uk
+
+
 def ingest(
     state: StreamingSVDState,
     delta,
@@ -153,20 +179,24 @@ def ingest(
     # and sketch matrices as the uninterrupted one (bit-identical).
     k_batch = jax.random.fold_in(state.key, state.batches_seen)
 
-    # Repair BEFORE factorization/truncation (the rank problem).
-    blocks = ranky.split_and_repair(a_norm, d, config.method, k_batch)
-
-    u_b, panel_b = _factor_batch(blocks, m_b, config, plan, k_batch)
-
-    # Merge-and-truncate: one hierarchy-style panel SVD of
-    # [V diag(decay*s) | B^T U_b], nothing bigger than (n_pad, k + r_b).
-    s_old = state.s * jnp.float32(config.history_decay)
-    p = jnp.concatenate([state.v * s_old[None, :], panel_b], axis=1)
-    k_old = state.rank
-    k_new = min(config.truncate_rank, p.shape[1])
-    v_new, s_new, uk = hierarchy.merge_svd(p, k_new)  # uk: (k_old+r_b, k_new)
-    u_new = jnp.concatenate(
-        [state.u @ uk[:k_old], u_b @ uk[k_old:]], axis=0)
+    statics = dict(d=d, m_b=m_b, config=config, plan=plan)
+    with obs.span("ingest.batch", rows=m_b, backend="single"):
+        blocks, u_b, v_new, s_new, uk = _ingest_math(
+            a_norm, k_batch, state.s, state.v, **statics)
+        k_old = state.rank
+        u_new = jnp.concatenate(
+            [state.u @ uk[:k_old], u_b @ uk[k_old:]], axis=0)
+    if obs.enabled():
+        obs.counter_add("ingest_batches_total")
+        obs.counter_add("ingest_rows_total", float(m_b))
+        # R5 drift: lower+compile a jit twin of the math above (partial
+        # keywords are trace-time constants) — compile-only, memoized
+        # per batch shape, never dispatched.
+        obs.observe_compiled(
+            "R5",
+            lambda: jax.jit(functools.partial(_ingest_math, **statics)),
+            (a_norm, k_batch, state.s, state.v),
+            plan.estimated_peak_bytes, component="temp", label="single")
 
     # Side-band diagnostics LAST: the device-to-host reads happen only
     # after the whole factor/merge pipeline is enqueued, so the sync
@@ -408,12 +438,22 @@ def ingest_shard_map(
     else:
         args = (jax.device_put(a_norm,
                                NamedSharding(mesh, P(None, STREAM_AXIS))),)
-    u_b, s_new, uk, v_new, repaired = fn(*args, *tail)
+    if obs.enabled():
+        # R5d drift: memory_analysis on the SPMD jit reports PER-DEVICE
+        # sizes, matching streaming_bytes_per_device in the plan.
+        obs.observe_compiled(
+            "R5d", lambda: fn, args + tail, plan.estimated_peak_bytes,
+            component="temp", label="shard_map")
+    with obs.span("ingest.batch", rows=m_b, backend="shard_map"):
+        u_b, s_new, uk, v_new, repaired = fn(*args, *tail)
 
-    # The left-factor update stays outside the region: u is in ingestion
-    # order and only the small (k_tot, k_new) rotation ever touches it.
-    u_new = jnp.concatenate(
-        [state.u @ uk[:k_old], u_b @ uk[k_old:]], axis=0)
+        # The left-factor update stays outside the region: u is in
+        # ingestion order and only the small (k_tot, k_new) rotation
+        # ever touches it.
+        u_new = jnp.concatenate(
+            [state.u @ uk[:k_old], u_b @ uk[k_old:]], axis=0)
+    obs.counter_add("ingest_batches_total")
+    obs.counter_add("ingest_rows_total", float(m_b))
 
     # Side-band diagnostics AFTER the sharded dispatch: the lonely-count
     # host read no longer serializes the region launch (the scan-window

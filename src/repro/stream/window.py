@@ -72,8 +72,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
+from repro.obs import clock
 from repro.compat import shard_map_nocheck as shard_map
-from repro.core import hierarchy, randomized, ranky, sparse
+from repro.core import hierarchy, planner, randomized, ranky, sparse
 from repro.core import svd as lsvd
 from repro.stream import state as stream_state
 from repro.stream.ingest import IngestInfo, _merge_truncate_local
@@ -509,11 +511,11 @@ def ingest_window(
                                                    P(None, None,
                                                      STREAM_AXIS))),
                       jax.device_put(xs[1], rep_sh))
-        carry, ys = fn(jax.device_put(state.key, rep_sh),
-                       jax.device_put(state.s, rep_sh), v0,
-                       jax.device_put(bidx0, rep_sh),
-                       jax.device_put(zero, rep_sh),
-                       jax.device_put(zero, rep_sh), *xs_dev)
+        call_args = (jax.device_put(state.key, rep_sh),
+                     jax.device_put(state.s, rep_sh), v0,
+                     jax.device_put(bidx0, rep_sh),
+                     jax.device_put(zero, rep_sh),
+                     jax.device_put(zero, rep_sh)) + xs_dev
     else:
         # Bucket signature minus m_pad-independent fields: width/n_univ
         # ride along as statics of the single-host builder.
@@ -521,8 +523,44 @@ def ingest_window(
                         config.oversample, config.power_iters,
                         config.method, config.use_kernel,
                         float(config.history_decay))
-        carry, ys = fn(state.key, state.s, state.v, bidx0,
-                       zero, zero, xs)
+        call_args = (state.key, state.s, state.v, bidx0, zero, zero, xs)
+
+    if not obs.enabled():
+        carry, ys = fn(*call_args)
+    else:
+        # Compile-vs-execute split via the trace-count probe: the jit
+        # cache grows iff this window's shape had not been traced yet.
+        pre_traces = fn._cache_size()
+        t0_us = clock.now_us()
+        carry, ys = fn(*call_args)
+        compiled = fn._cache_size() > pre_traces
+        obs.trace.add_complete(
+            "ingest.window", t0_us, clock.now_us() - t0_us,
+            bucket=str(sig), batches=t_len, backend=plan.backend,
+            compiled=compiled)
+        obs.counter_add("window_dispatch_total")
+        if compiled:
+            obs.counter_add("window_compile_total")
+        obs.counter_add("ingest_batches_total", float(t_len))
+        obs.counter_add("ingest_rows_total", float(sum(true_m)))
+        obs.gauge_set("jit_cache_size", trace_count())
+        # R6 drift at the ACTUAL window length (tail windows are shorter
+        # than plan.window): re-price the closed form for t_len batches
+        # and compare XLA's buffer plan — compile-only, no dispatch, one
+        # measurement per bucket shape.  Dense nnz = the padded block
+        # input; ell nnz = slot capacity (upper bound, so the estimate
+        # can only be conservative).
+        nnz_slots = bucket_nnz_slots(sig, d)
+        spec = planner.ASpec(
+            m=m_pad, n=n_univ,
+            nnz=nnz_slots if nnz_slots is not None else m_pad * n_univ,
+            num_blocks=d, kind="stream")
+        est = planner.window_bytes(
+            spec, k, config.oversample, exact=plan.rank is None,
+            window=t_len, batch_rank=plan.rank, nnz_slots=nnz_slots,
+            per_device=plan.backend == "shard_map")
+        obs.observe_compiled("R6", lambda: fn, call_args, est,
+                             component="total", label=plan.backend)
 
     _DISPATCH["windows"] += 1
     _DISPATCH["batches"] += t_len

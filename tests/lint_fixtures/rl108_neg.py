@@ -1,0 +1,14 @@
+"""RL108 true negative: the same timing/telemetry needs routed through
+the observability layer — one timebase, gated structured records."""
+from repro import obs
+from repro.obs import clock
+
+
+def serve_wave(handle, wave):
+    t0 = clock.now_us()                  # obs timebase, not perf_counter
+    with obs.span("serve.topk", batch=wave.shape[0]):
+        res = handle.topk(wave)
+    obs.histogram_observe("serve_latency_us", clock.now_us() - t0)
+    obs.event("wave.done", version=res.version)   # structured, not print
+    stamp = clock.wall()                 # wall time via the obs clock
+    return res, stamp

@@ -1,0 +1,14 @@
+"""RL108 true positive: raw clocks and print() in a production
+subsystem (the fixture is analyzed under a serve/ path) — timing and
+logging that bypass the observability clock and ring buffer."""
+import time
+from time import perf_counter
+
+
+def serve_wave(handle, wave):
+    t0 = time.perf_counter()            # RL108: raw perf_counter
+    res = handle.topk(wave)
+    latency = perf_counter() - t0       # RL108: from-import alias too
+    print("wave latency", latency)      # RL108: print bypasses obs
+    stamp = time.time()                 # RL108: raw wall clock
+    return res, stamp

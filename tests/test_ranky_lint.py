@@ -16,7 +16,8 @@ from repro.analysis.suppress import collect_suppressions
 HERE = os.path.dirname(os.path.abspath(__file__))
 FIXTURES = os.path.join(HERE, "lint_fixtures")
 REPO = os.path.dirname(HERE)
-RULE_IDS = ("RL101", "RL102", "RL103", "RL104", "RL105", "RL106", "RL107")
+RULE_IDS = ("RL101", "RL102", "RL103", "RL104", "RL105", "RL106", "RL107",
+            "RL108")
 
 
 def _fixture(name):
@@ -26,11 +27,12 @@ def _fixture(name):
 
 def _analyze_fixture(name, path=None):
     # Synthetic src-like paths keep RL104's tests/-whitelist out of the
-    # way; the whitelist itself is exercised explicitly below.  RL107 is
-    # scoped to the serve/stream hot-path directories, so its fixtures
-    # analyze under one.
+    # way; the whitelist itself is exercised explicitly below.  RL107
+    # and RL108 are scoped to production subsystem directories, so
+    # their fixtures analyze under one.
     if path is None:
-        base = ("src/repro/serve/" if name.startswith("rl107")
+        base = ("src/repro/serve/"
+                if name.startswith(("rl107", "rl108"))
                 else "src/fixtures/")
         path = base + name
     return analyze_sources([(path, _fixture(name))])
