@@ -6,7 +6,8 @@ and optionally machine-readable JSON.
       [--skip SECTION ...] [--only SECTION] [--json OUT.json]
 
 Sections: paper, rank_problem, merge, sparse, randomized, streaming,
-streaming_scan, streaming_dist, serving, lm.  ``--only SECTION`` runs just that section and
+streaming_scan, streaming_dist, serving, recovery, lm.  ``--only
+SECTION`` runs just that section and
 ``--json OUT.json`` additionally writes one record per row with the
 fields CI consumes: ``section``, ``name``, ``shape`` ("MxN" parsed from
 the name, null when the row has no shape), ``us_per_call``, ``rel_err``
@@ -27,7 +28,7 @@ import sys
 
 SECTIONS = ("paper", "rank_problem", "merge", "sparse", "randomized",
             "streaming", "streaming_scan", "streaming_dist", "serving",
-            "lm")
+            "recovery", "lm")
 
 _SHAPE_RE = re.compile(r"(\d+)x(\d+)")
 _ERR_RE = re.compile(
@@ -131,6 +132,13 @@ def _run_serving(rows, full: bool) -> None:
         rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
 
 
+def _run_recovery(rows, full: bool) -> None:
+    from benchmarks import recovery
+    print("# supervised stream fault recovery (rule R8)", flush=True)
+    for r in recovery.run():
+        rows.append((r["name"], r["seconds"] * 1e6, r["derived"]))
+
+
 def _run_lm(rows, full: bool) -> None:
     from benchmarks import lm_step
     print("# lm steps (reduced configs)", flush=True)
@@ -149,6 +157,7 @@ _RUNNERS = {
     "streaming_scan": _run_streaming_scan,
     "streaming_dist": _run_streaming_dist,
     "serving": _run_serving,
+    "recovery": _run_recovery,
     "lm": _run_lm,
 }
 

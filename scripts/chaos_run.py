@@ -1,0 +1,233 @@
+#!/usr/bin/env python
+"""Scripted chaos scenarios for the CI ``chaos`` job.
+
+    PYTHONPATH=src python scripts/chaos_run.py \
+        --scenario kill-at-batch --out recovery-events.json
+
+Each scenario runs an 8-forced-device supervised stream
+(``ft.StreamSupervisor``) against a deterministic fault script
+(``ft.inject``), asserts the recovery contract, and writes the
+machine-readable recovery events as the CI artifact:
+
+* ``kill-at-batch``        — device killed at ingest entry.  Leg A:
+  num_blocks=4 on 8 devices, the mesh rebuilds on the 7 survivors and
+  the resumed factors are BIT-IDENTICAL to an uninterrupted run.  Leg
+  B: num_blocks=8, cascade kills leave too few devices for one block
+  each — the supervisor degrades honestly to single-host (planner rule
+  R8 says so in the event), resumes bit-identically from the last
+  commit, and the full run matches a pure single-host oracle to 1e-5.
+* ``persistent-straggler`` — one device runs 4x slow forever; the
+  obs-fed ``StragglerMonitor`` flags it (backup-shard duplicate-ingest
+  absorbs the early windows), evicts it at ``patience`` consecutive
+  flags, and the re-meshed stream finishes bit-identical to the
+  unfaulted run.
+* ``kill-during-merge``    — a transiently dropped merge collective
+  (bounded retry, bit-identical replay) followed by a device lost at
+  the merge dispatch (full recovery path).
+
+Every scenario also asserts the recovery is visible in the obs span
+trace (``recover.drain`` / ``recover.replan`` / ``recover.restore``).
+Exit 0 = contract holds; AssertionError otherwise.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# 8 forced host devices; must land before jax initializes.
+if "jax" not in sys.modules and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro import ft, obs                                  # noqa: E402
+from repro.core import api                                 # noqa: E402
+from repro.ft.straggler import StragglerConfig             # noqa: E402
+from repro.stream import state as stream_state             # noqa: E402
+
+N, K, M_B, BATCHES = 16, 4, 6, 8
+
+
+def _batches(seed: int):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((M_B, N)).astype(np.float32))
+            for _ in range(BATCHES)]
+
+
+def _config(num_blocks: int, every: int = 2, **kw):
+    return api.SolveConfig(truncate_rank=K, num_blocks=num_blocks,
+                           checkpoint_every=every, max_retries=2,
+                           stream_backend="shard_map", **kw)
+
+
+def _supervised(cfg, batches, injector=None, straggler=None):
+    """One supervised run in a throwaway checkpoint dir; returns
+    (gathered final state, supervisor)."""
+    with tempfile.TemporaryDirectory() as d:
+        sup = ft.StreamSupervisor(cfg, d, state=api.svd_init(N, cfg),
+                                  injector=injector, straggler=straggler)
+        try:
+            if injector is not None:
+                with injector.installed():
+                    final = sup.run(batches)
+            else:
+                final = sup.run(batches)
+        finally:
+            sup.close()
+    final = stream_state.gather_state(final)
+    stream_state.set_stream_devices(None)
+    return final, sup
+
+
+def _bitwise(a, b) -> bool:
+    return all(bool(jnp.array_equal(x, y)) for x, y in
+               ((a.u, b.u), (a.s, b.s), (a.v, b.v)))
+
+
+def _assert_recover_spans():
+    names = {e.name for e in obs.trace.events()}
+    for span in ("recover.drain", "recover.replan", "recover.restore"):
+        assert span in names, \
+            f"recovery ran but span {span!r} missing from the obs trace"
+
+
+def scenario_kill_at_batch():
+    batches = _batches(0)
+
+    # Leg A: 4 column blocks on 8 devices; kill one -> 7 survivors
+    # still fit a block each -> the 1-D mesh rebuilds, no degrade.
+    cfg = _config(num_blocks=4)
+    oracle, _ = _supervised(cfg, batches)
+    inj = ft.FaultInjector([ft.FailDeviceAt(device=2, at_batch=4)])
+    final, sup = _supervised(cfg, batches, injector=inj)
+    ev = sup.events[0]
+    assert ev.kind == "device_lost" and ev.survivors == 7
+    assert ev.backend_before == "shard_map" == ev.backend_after, \
+        f"7 survivors fit 4 blocks; got degrade to {ev.backend_after}"
+    assert _bitwise(final, oracle), \
+        "re-meshed resume is not bit-identical to the uninterrupted run"
+    _assert_recover_spans()
+
+    # Leg B: 8 blocks on 8 devices; cascade kills down to 4 survivors
+    # -> too few for one block each -> honest single-host degrade,
+    # explained by R8 on the first shrink and re-stated on each later
+    # loss.
+    cfg8 = _config(num_blocks=8)
+    inj2 = ft.FaultInjector([ft.FailDeviceAt(device=1, at_batch=3),
+                             ft.FailDeviceAt(device=6, at_batch=5),
+                             ft.FailDeviceAt(device=4, at_batch=6),
+                             ft.FailDeviceAt(device=0, at_batch=7)])
+    final8, sup8 = _supervised(cfg8, batches, injector=inj2)
+    kinds = [e.kind for e in sup8.events]
+    assert kinds == ["device_lost"] * 4, kinds
+    assert sup8.events[0].backend_after == "single"
+    assert [e.survivors for e in sup8.events] == [7, 6, 5, 4]
+    assert any("degrading honestly" in r
+               for e in sup8.events for r in e.reasons), \
+        "R8 degrade explanation missing from the recovery events"
+
+    # Bitwise oracle: sharded to the last commit before the kill, then
+    # a manual single-host continuation with the same chunking.
+    head, _ = _supervised(cfg8, batches[:2])
+    cfg_single = api.SolveConfig(truncate_rank=K, num_blocks=8,
+                                 stream_backend="single")
+    st, i = head, 2
+    while i < len(batches):
+        st = api.svd_stream(batches[i:i + 2], cfg_single, state=st).state
+        i += 2
+    assert _bitwise(final8, st), \
+        "degraded resume is not bit-identical to the manual continuation"
+    pure = api.svd_stream(batches, cfg_single)
+    rel = float(jnp.linalg.norm(final8.s - pure.state.s)
+                / jnp.linalg.norm(pure.state.s))
+    assert rel < 1e-5, f"degraded run drifted from the oracle: rel={rel}"
+    return {"legA": sup.events_json(), "legB": sup8.events_json(),
+            "legB_rel_err": rel}, sup8
+
+
+def scenario_persistent_straggler():
+    batches = _batches(1)
+    cfg = _config(num_blocks=4, every=1)
+    scfg = StragglerConfig(alpha=1.0, threshold=1.5, patience=3,
+                           policy="evict")
+    oracle, _ = _supervised(cfg, batches, straggler=scfg)
+    inj = ft.FaultInjector([ft.DelayDevice(device=1, factor=4.0)])
+    final, sup = _supervised(cfg, batches, injector=inj, straggler=scfg)
+    evs = [e for e in sup.events if e.kind == "straggler_evict"]
+    assert len(evs) == 1, \
+        f"want exactly one eviction, got {[e.kind for e in sup.events]}"
+    assert evs[0].device == 1 and evs[0].survivors == 7
+    assert sup.backup_saved_s > 0, \
+        "backup-shard duplicate-ingest never engaged on the flagged slot"
+    assert _bitwise(final, oracle), \
+        "post-eviction stream is not bit-identical to the unfaulted run"
+    _assert_recover_spans()
+    return {"events": sup.events_json(),
+            "backup_saved_s": sup.backup_saved_s}, sup
+
+
+def scenario_kill_during_merge():
+    batches = _batches(2)
+    cfg = _config(num_blocks=4)
+    oracle, _ = _supervised(cfg, batches)
+    inj = ft.FaultInjector([
+        ft.DropCollective(at_batch=3),
+        ft.FailDeviceAt(device=3, at_batch=5, phase="merge")])
+    final, sup = _supervised(cfg, batches, injector=inj)
+    kinds = [e.kind for e in sup.events]
+    assert kinds == ["collective_retry", "device_lost"], kinds
+    assert sup.events[0].retries == 1
+    assert sup.events[1].survivors == 7
+    assert _bitwise(final, oracle), \
+        "merge-fault recovery is not bit-identical to the unfaulted run"
+    _assert_recover_spans()
+    return {"events": sup.events_json()}, sup
+
+
+SCENARIOS = {
+    "kill-at-batch": scenario_kill_at_batch,
+    "persistent-straggler": scenario_persistent_straggler,
+    "kill-during-merge": scenario_kill_during_merge,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", required=True, choices=sorted(SCENARIOS))
+    ap.add_argument("--out", default=None,
+                    help="write the recovery-event JSON artifact here")
+    args = ap.parse_args(argv)
+
+    assert jax.device_count() == 8, \
+        f"chaos scenarios are stated on 8 forced host devices, " \
+        f"got {jax.device_count()}"
+    obs.reset()
+    obs.enable()
+    try:
+        doc, sup = SCENARIOS[args.scenario]()
+    finally:
+        obs.disable()
+    doc = {"scenario": args.scenario, "devices": jax.device_count(),
+           **doc}
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {args.out}")
+    print(f"{args.scenario} OK: {len(sup.events)} recovery event(s), "
+          f"{len(sup.healthy)}/{len(sup.pool)} devices healthy at exit")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -133,11 +133,39 @@ def check_serving(recs) -> None:
              f"closed form: {d!r}")
 
 
+# An injected fault on CI-sized toy streams recovers in well under a
+# second; a bound this loose only trips when recovery hangs (a retry
+# loop that never converges, a drain that blocks on a dead writer).
+RECOVERY_WALL_BOUND_S = 120.0
+
+
+def check_recovery(recs) -> None:
+    rows = [r for r in recs if r["name"].startswith("recovery_")]
+    assert rows, "recovery section has no recovery_* rows"
+    for r in rows:
+        d = r["derived"]
+        wall = _derived_float(d, "recovery_wall_s")
+        assert wall < RECOVERY_WALL_BOUND_S, \
+            (f"{r['name']}: recovery took {wall:.1f}s (bound "
+             f"{RECOVERY_WALL_BOUND_S}s) — the drain/replan/restore "
+             f"path is hanging")
+        assert _derived_int(d, "bit_identical") == 1, \
+            (f"{r['name']}: resumed factors differ from the "
+             f"uninterrupted run — the bit-identical recovery "
+             f"contract is broken: {d!r}")
+        assert _derived_int(d, "r8_peak_b") == _derived_int(
+            d, "r8_expected_b"), \
+            (f"{r['name']}: post-shrink peak != hand-computed R8 "
+             f"closed form: {d!r}")
+        assert _derived_int(d, "survivors") >= 1
+
+
 SECTION_CHECKS = {
     "streaming": check_streaming,
     "streaming_scan": check_streaming_scan,
     "streaming_dist": check_streaming_dist,
     "serving": check_serving,
+    "recovery": check_recovery,
 }
 
 # span categories an observe-on streaming + serving run must cover
@@ -202,6 +230,11 @@ def main(argv=None) -> int:
                     help="also validate this Chrome/Perfetto trace "
                          "artifact and the <1%% disabled-mode serving "
                          "p99 overhead recorded by the serving section")
+    ap.add_argument("--check-recovery", action="store_true",
+                    help="require recovery_* rows to be present (the "
+                         "recovery leg must not silently skip its "
+                         "scenario); their invariants are checked for "
+                         "any JSON that carries the section either way")
     args = ap.parse_args(argv)
 
     with open(args.json_path) as f:
@@ -225,6 +258,12 @@ def main(argv=None) -> int:
         check = SECTION_CHECKS.get(section)
         if check is not None:
             check([r for r in recs if r["section"] == section])
+
+    if args.check_recovery:
+        assert any(r["name"].startswith("recovery_") for r in recs), \
+            (f"{args.json_path}: --check-recovery but no recovery_* "
+             f"rows — the recovery scenario never ran")
+        check_recovery([r for r in recs if r["section"] == "recovery"])
 
     if args.check_obs is not None:
         check_obs(recs, args.check_obs)

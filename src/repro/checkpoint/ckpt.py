@@ -121,7 +121,7 @@ def _unflatten(flat: Dict[str, Any]):
     return tree
 
 
-def _rebuild(node):
+def _rebuild(node, reshard: bool = True):
     """Reconstruct registered pytree dataclasses (bottom-up) from the
     marker dicts ``_flatten`` wrote."""
     if not isinstance(node, dict):
@@ -130,16 +130,19 @@ def _rebuild(node):
         cls = _resolve_type(str(node[_TYPE_KEY]))
         aux = tuple(json.loads(str(node[_AUX_KEY])))
         n_children = len(node) - 2
-        children = tuple(_rebuild(node[f"c{i}"]) for i in range(n_children))
+        children = tuple(_rebuild(node[f"c{i}"], reshard)
+                         for i in range(n_children))
         obj = cls.tree_unflatten(aux, children)
         # Device-count-aware re-placement: a rebuilt dataclass may opt
         # into resharding itself for the CURRENT device environment
         # (e.g. StreamingSVDState re-shards its v when one device per
         # column block is available) — checkpoints are saved gathered,
-        # so this is placement only, never values.
+        # so this is placement only, never values.  ``reshard=False``
+        # skips the hook for callers that re-place explicitly (elastic
+        # recovery re-plans the mesh first, then shards).
         hook = getattr(obj, "reshard_for_restore", None)
-        return hook() if callable(hook) else obj
-    return {k: _rebuild(v) for k, v in node.items()}
+        return hook() if reshard and callable(hook) else obj
+    return {k: _rebuild(v, reshard) for k, v in node.items()}
 
 
 def _encode_leaf(v) -> np.ndarray:
@@ -240,9 +243,13 @@ class Checkpointer:
         return steps[-1] if steps else None
 
     def restore(self, step: Optional[int] = None, *, shardings=None,
-                expect_signature: Optional[str] = None):
+                expect_signature: Optional[str] = None,
+                reshard: bool = True):
         """Load a checkpoint and (re-)shard it.  ``shardings`` may come
-        from a DIFFERENT mesh than the one that saved — elastic restore."""
+        from a DIFFERENT mesh than the one that saved — elastic restore.
+        ``reshard=False`` skips the rebuilt objects' own
+        ``reshard_for_restore`` hook (the elastic-recovery path re-plans
+        the mesh first and re-places the state itself)."""
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -278,4 +285,4 @@ class Checkpointer:
                 lambda x: x if _is_marker(x) else jax.device_put(x), tree)
         # Rebuild registered pytree dataclasses LAST, once every array
         # child is on device (markers are consumed here).
-        return _rebuild(tree), meta
+        return _rebuild(tree, reshard), meta

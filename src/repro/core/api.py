@@ -140,6 +140,16 @@ class SolveConfig:
       adaptive_oversample``) instead of the static ``k + oversample``;
       a width change re-buckets (and retraces) the scan.
     * ``memory_budget_bytes`` — planner budget (default 4 GiB).
+    * ``checkpoint_every`` — streaming only: commit granularity of a
+      supervised stream (``ft.StreamSupervisor``): the supervisor
+      checkpoints after every N successfully ingested batches, and
+      recovery resumes from the last committed one.  ``None`` (the
+      default) means "supervisor default" (every batch).
+    * ``max_retries`` / ``retry_backoff_s`` — streaming only: the
+      supervisor's bounded retry policy.  A transient fault (dropped
+      collective) replays the uncommitted batches up to ``max_retries``
+      times, sleeping ``retry_backoff_s * 2**attempt`` between tries,
+      before escalating to a full device-loss recovery.
     * ``observe`` — switch on the runtime observability layer
       (``repro.obs``: span traces, metrics, plan-vs-measured drift) for
       this and every later call; sticky process-wide, off by default.
@@ -168,6 +178,9 @@ class SolveConfig:
     window: Optional[int] = None
     adaptive_width: bool = False
     memory_budget_bytes: Optional[int] = None
+    checkpoint_every: Optional[int] = None
+    max_retries: int = 2
+    retry_backoff_s: float = 0.0
     observe: bool = False
     key: Optional[jax.Array] = None
 
@@ -223,6 +236,19 @@ class SolveConfig:
             raise ValueError(
                 f"invalid SolveConfig: window={self.window} must be >= 1 "
                 f"(1 = per-batch loop) or None for the planner default")
+        if self.checkpoint_every is not None and self.checkpoint_every < 1:
+            raise ValueError(
+                f"invalid SolveConfig: checkpoint_every="
+                f"{self.checkpoint_every} must be >= 1 (or None for the "
+                f"supervisor default)")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"invalid SolveConfig: max_retries={self.max_retries} "
+                f"must be >= 0")
+        if self.retry_backoff_s < 0.0:
+            raise ValueError(
+                f"invalid SolveConfig: retry_backoff_s="
+                f"{self.retry_backoff_s} must be >= 0")
 
         # --- cross-field constraints (each names both fields) -------
         if self.undetermined_tail and self.merge_mode == "gram":
@@ -290,6 +316,11 @@ class SolveConfig:
             raise _bad("adaptive_width", True, "truncate_rank", None,
                        "the tail-adaptive merge width reads the streaming "
                        "state's spectrum; set truncate_rank=k to stream")
+        if self.checkpoint_every is not None and self.truncate_rank is None:
+            raise _bad("checkpoint_every", self.checkpoint_every,
+                       "truncate_rank", None,
+                       "the supervised commit cadence applies to streaming "
+                       "ingests; set truncate_rank=k to stream")
         if self.adaptive_width and self.rank is not None:
             raise _bad("adaptive_width", True, "rank", self.rank,
                        "rank= forces the randomized batch factorization "
@@ -780,8 +811,8 @@ def plan_update(batch: Union[MatrixInput, ASpec],
 
     config = _require_stream_config(_coerce_config(config, overrides))
     if isinstance(batch, ASpec):
-        return planner.make_stream_plan(batch, config,
-                                        device_count=jax.device_count())
+        return planner.make_stream_plan(
+            batch, config, device_count=streaming.stream_device_count())
     if state is None:
         raise ValueError(
             "plan_update needs state= (for the column universe) when "
@@ -790,8 +821,8 @@ def plan_update(batch: Union[MatrixInput, ASpec],
     m_b, _ = streaming.delta_shape(batch)
     spec = ASpec(m=m_b, n=state.n, nnz=_delta_nnz_estimate(batch),
                  num_blocks=state.num_blocks, kind="stream")
-    p = planner.make_stream_plan(spec, config,
-                                 device_count=jax.device_count())
+    p = planner.make_stream_plan(
+        spec, config, device_count=streaming.stream_device_count())
     # R5's closed form covers the merge working set; with a real state
     # in hand the (linear-in-rows-seen) left-factor update is concrete,
     # so say it out loud.
@@ -951,7 +982,8 @@ def svd_stream(batches, config: Optional[SolveConfig] = None, *,
                          nnz=_delta_nnz_estimate(norm),
                          num_blocks=state.num_blocks, kind="stream")
             pending_plan = planner.make_window_plan(
-                spec, pending_cfg, device_count=jax.device_count(),
+                spec, pending_cfg,
+                device_count=streaming.stream_device_count(),
                 nnz_slots=swindow.bucket_nnz_slots(sig, state.num_blocks))
         pending.append(norm)
         if len(pending) >= pending_plan.window:

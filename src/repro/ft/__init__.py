@@ -1,2 +1,8 @@
-from repro.ft.elastic import ElasticPlan, build_mesh, plan_mesh, recover  # noqa: F401
+from repro.ft.elastic import (  # noqa: F401
+    ElasticPlan, build_mesh, plan_mesh, plan_stream_mesh, recover)
+from repro.ft.inject import (  # noqa: F401
+    CollectiveDropError, DelayDevice, DeviceLostError, DropCollective,
+    FailDeviceAt, FaultInjector)
 from repro.ft.straggler import StragglerConfig, StragglerMonitor  # noqa: F401
+from repro.ft.supervise import (  # noqa: F401
+    NoSurvivorsError, RecoveryEvent, StreamSupervisor)

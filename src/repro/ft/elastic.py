@@ -1,5 +1,5 @@
 """Elastic scaling: rebuild the mesh after host loss (or growth) and
-restore training state onto it.
+restore training or streaming state onto it.
 
 Recovery contract (synchronous SPMD, checkpoint-based):
 
@@ -27,6 +27,7 @@ import jax
 from jax.sharding import Mesh
 
 from repro.models.layers import ShardCtx
+from repro.stream.state import STREAM_AXIS
 
 # Canonical elastic mesh axes.  Declared as *_AXIS module constants so
 # ranky-lint RL103 knows any collective naming them is legal.
@@ -70,6 +71,31 @@ def plan_mesh(num_devices: int, *, model_parallel: int = 16,
                        num_devices - used)
 
 
+def plan_stream_mesh(num_devices: int, num_blocks: int) -> ElasticPlan:
+    """The stream-shaped sibling of :func:`plan_mesh`: a 1-D
+    ``(num_blocks,)`` grid over the streaming engines' single
+    ``STREAM_AXIS`` — one column block per device, no model axis, no
+    ``repro.train`` anywhere near it.
+
+    When fewer than ``num_blocks`` devices survive there is no layout
+    with one block per device, so the plan degrades honestly to a
+    single-host ``(1,)`` grid (planner rule R8 prices what that costs;
+    ``ft.supervise.StreamSupervisor`` records why).  ``dropped_devices``
+    counts the healthy survivors the grid leaves idle.
+    """
+    if num_devices < 1:
+        raise ValueError(
+            f"plan_stream_mesh needs >= 1 surviving device, got "
+            f"{num_devices}")
+    if num_blocks < 1:
+        raise ValueError(
+            f"plan_stream_mesh needs num_blocks >= 1, got {num_blocks}")
+    if num_devices >= num_blocks and num_blocks > 1:
+        return ElasticPlan((num_blocks,), (STREAM_AXIS,),
+                           num_devices - num_blocks)
+    return ElasticPlan((1,), (STREAM_AXIS,), num_devices - 1)
+
+
 def build_mesh(plan: ElasticPlan, devices: Optional[Sequence] = None) -> Mesh:
     devices = list(devices if devices is not None else jax.devices())
     if len(devices) < plan.num_devices:
@@ -80,15 +106,28 @@ def build_mesh(plan: ElasticPlan, devices: Optional[Sequence] = None) -> Mesh:
     return Mesh(np.asarray(devices).reshape(plan.shape), plan.axis_names)
 
 
-def recover(checkpointer, cfg, tcfg, survivors: Sequence, *,
-            model_parallel: int = 16):
+def recover(checkpointer, cfg=None, tcfg=None, survivors: Sequence = (), *,
+            shardings_fn=None, model_parallel: int = 16):
     """Full recovery path: survivors -> new mesh -> restored state.
-    Returns (mesh, ctx, state, meta)."""
-    from repro.train.step import state_shardings
+    Returns (mesh, ctx, state, meta).
 
+    ``shardings_fn(ctx) -> shardings`` builds the restore shardings for
+    the new mesh — inject it and the module never touches the train
+    stack (the streaming supervisor and tests run without it).  When
+    omitted, the legacy train path is used: ``repro.train.step.
+    state_shardings(cfg, tcfg, ctx)``, imported lazily here so merely
+    importing ``repro.ft`` stays train-free either way.
+    """
+    if not survivors:
+        raise ValueError("recover needs a non-empty survivor list")
     plan = plan_mesh(len(survivors), model_parallel=model_parallel)
     mesh = build_mesh(plan, survivors)
     ctx = ShardCtx(mesh=mesh)
-    shardings = state_shardings(cfg, tcfg, ctx)
+    if shardings_fn is None:
+        from repro.train.step import state_shardings
+
+        shardings = state_shardings(cfg, tcfg, ctx)
+    else:
+        shardings = shardings_fn(ctx)
     state, meta = checkpointer.restore(shardings=shardings)
     return mesh, ctx, state, meta

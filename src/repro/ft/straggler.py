@@ -11,12 +11,16 @@ outliers, and drives the mitigation policy:
 
 Timing source: on a real deployment every host reports its local step
 wall-time through the metrics all-gather that the train loop already
-does; here the monitor consumes whatever times are fed to ``observe``
-(tests feed synthetic distributions)."""
+does.  ``observe`` consumes raw per-host times; ``observe_window`` is
+the ``repro.obs``-fed adapter the streaming supervisor uses — one
+ingest span's duration fanned out by per-slot skew factors, scaled up
+by the plan-vs-measured drift gauge when a window blew its planned
+working set (a slot that is slow *and* over-plan is slow for a reason
+the EWMA should weigh)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 
 @dataclasses.dataclass
@@ -64,3 +68,22 @@ class StragglerMonitor:
                  if self.flag_streak[h] >= self.cfg.patience
                  and self.cfg.policy == "evict"]
         return {"flagged": flagged, "evict": evict}
+
+    def observe_window(self, span_dur_s: float,
+                       skew_factors: Sequence[float], *,
+                       drift: Optional[float] = None) -> Dict[str, list]:
+        """The ``repro.obs``-fed feed: one window's ``ingest.*`` span
+        duration (seconds), fanned to per-slot times by measured (or
+        injected) per-slot skew factors, scaled by the worst
+        plan-vs-measured drift ratio when > 1.  On a multi-host
+        deployment the factors come from each host's own span ring; on
+        a forced-host simulation they come from the fault injector's
+        delay seam.  Returns :meth:`observe`'s verdict."""
+        if len(skew_factors) != self.num_hosts:
+            raise ValueError(
+                f"observe_window got {len(skew_factors)} skew factors "
+                f"for {self.num_hosts} hosts")
+        scale = max(1.0, drift) if drift is not None else 1.0
+        return self.observe(
+            {h: span_dur_s * f * scale
+             for h, f in enumerate(skew_factors)})

@@ -30,7 +30,11 @@ from repro.stream.state import (  # noqa: F401
     delta_shape,
     gather_state,
     init_state,
+    set_stream_devices,
     shard_state,
+    stream_device_count,
+    stream_devices,
+    stream_devices_key,
     stream_mesh,
 )
 
@@ -39,5 +43,7 @@ __all__ = [
     "ingest_window", "bucket_signature", "build_window",
     "adaptive_oversample", "IngestInfo", "as_delta", "delta_shape",
     "shard_state", "gather_state", "stream_mesh", "STREAM_AXIS",
+    "set_stream_devices", "stream_devices", "stream_device_count",
+    "stream_devices_key",
     "decay_from_timestamps",
 ]

@@ -79,6 +79,33 @@ from repro.stream import state as stream_state
 from repro.stream.state import STREAM_AXIS, StreamingSVDState
 
 
+# ---------------------------------------------------------------------------
+# Deterministic fault-injection seam (ft/inject.py)
+# ---------------------------------------------------------------------------
+# ``ft.inject.FaultInjector.install`` points this at its ``fire``
+# callable so chaos tests and CI can script device failures without
+# real hardware; ``None`` (the default) is production — the seam
+# short-circuits to nothing.  The seam only ever fires from EAGER code
+# (``trace_state_clean`` guard, the same idiom as ``obs.trace``), so
+# the jitted math and its compile-only drift twin are never perturbed
+# and observe-on/-off bit-identity is untouched.
+_fault_seam = None
+
+
+def install_fault_seam(fn) -> None:
+    """Install (or with ``None`` remove) the fault-injection callable.
+    ``fn(phase)`` is called at the seam points — ``"ingest.batch"`` /
+    ``"ingest.window"`` at engine entry, ``"ingest.merge"`` just before
+    the merge/collective work — and simulates a fault by raising."""
+    global _fault_seam
+    _fault_seam = fn
+
+
+def _fire_seam(phase: str) -> None:
+    if _fault_seam is not None and jax.core.trace_state_clean():
+        _fault_seam(phase)
+
+
 @dataclasses.dataclass(frozen=True)
 class IngestInfo:
     """Side-band observations of one ingest (per batch, not cumulative —
@@ -143,6 +170,7 @@ def _ingest_math(a_norm, k_batch, s, v, *, d, m_b, config, plan):
     blocks = ranky.split_and_repair(a_norm, d, config.method, k_batch)
 
     u_b, panel_b = _factor_batch(blocks, m_b, config, plan, k_batch)
+    _fire_seam("ingest.merge")
 
     # Merge-and-truncate: one hierarchy-style panel SVD of
     # [V diag(decay*s) | B^T U_b], nothing bigger than (n_pad, k + r_b).
@@ -170,6 +198,7 @@ def ingest(
     """
     if plan.backend == "shard_map":
         return ingest_shard_map(state, delta, config, plan)
+    _fire_seam("ingest.batch")
     a_norm = stream_state.as_delta(delta, state)
     m_b, _ = stream_state.delta_shape(delta)
     d = state.num_blocks
@@ -357,7 +386,8 @@ def _sparse_stream_shard_fn(
 
 
 @functools.lru_cache(maxsize=64)
-def _sharded_ingest_fn(d: int, kind: str, m_b: int, width: int,
+def _sharded_ingest_fn(devices_key: Tuple[int, ...], d: int, kind: str,
+                       m_b: int, width: int,
                        r_b: int, k_new: int, sk_rank: Optional[int],
                        oversample: int, power_iters: int, method: str,
                        use_kernel: bool):
@@ -367,7 +397,11 @@ def _sharded_ingest_fn(d: int, kind: str, m_b: int, width: int,
     truncate_rank) compiles its sharded update ONCE and replays it
     every ingest — the jit cache keys on argument avals underneath, so
     a shape change (e.g. the rank still growing toward truncate_rank)
-    retraces exactly like the single-host engine would."""
+    retraces exactly like the single-host engine would.
+    ``devices_key`` is the active stream-device pool's identity
+    (``stream_state.stream_devices_key()``): after an elastic re-mesh
+    onto survivors the pool changes, so the entry keyed on the dead
+    mesh is never reused."""
     mesh = stream_state.stream_mesh(d)
     axes = (STREAM_AXIS,)
     common = dict(axes=axes, method=method, use_kernel=use_kernel,
@@ -403,10 +437,12 @@ def ingest_shard_map(
     ``core/distributed.py``, and the factors agree with the single-host
     result up to reduction-order float error and column signs."""
     d = state.num_blocks
-    if jax.device_count() != d:
+    if stream_state.stream_device_count() < d:
         raise ValueError(
             f"plan.backend='shard_map' needs one device per column "
-            f"block: num_blocks={d} but device_count={jax.device_count()}")
+            f"block: num_blocks={d} but only "
+            f"{stream_state.stream_device_count()} healthy device(s)")
+    _fire_seam("ingest.batch")
     a_norm = stream_state.as_delta(delta, state)
     m_b, _ = stream_state.delta_shape(delta)
 
@@ -421,6 +457,7 @@ def ingest_shard_map(
 
     sparse_in = isinstance(a_norm, sparse.BlockEll)
     mesh, fn = _sharded_ingest_fn(
+        stream_state.stream_devices_key(),
         d, "ell" if sparse_in else "dense", m_b,
         a_norm.width if sparse_in else a_norm.shape[1] // d,
         r_b, k_new, plan.rank, config.oversample, config.power_iters,
@@ -444,6 +481,10 @@ def ingest_shard_map(
         obs.observe_compiled(
             "R5d", lambda: fn, args + tail, plan.estimated_peak_bytes,
             component="temp", label="shard_map")
+    # The merge seam brackets the compiled region (a raise cannot come
+    # from inside an XLA collective): "during merge" faults surface at
+    # the dispatch covering the merge.
+    _fire_seam("ingest.merge")
     with obs.span("ingest.batch", rows=m_b, backend="shard_map"):
         u_b, s_new, uk, v_new, repaired = fn(*args, *tail)
 

@@ -62,6 +62,45 @@ from repro.core import ranky, sparse
 # block per device, like core/distributed.py's block axes).
 STREAM_AXIS = "blocks"
 
+# ---------------------------------------------------------------------------
+# Active stream-device registry (elastic recovery support)
+# ---------------------------------------------------------------------------
+# The pool of devices the streaming engines are allowed to place work
+# on.  ``None`` (the default) means "all local devices" — every existing
+# call path behaves exactly as before.  ``ft/supervise.py`` restricts
+# the pool to the surviving devices after a failure/eviction so
+# ``stream_mesh`` / ``shard_state`` / ``reshard_for_restore`` rebuild
+# onto the survivors instead of the dead mesh.
+_STREAM_DEVICES: Optional[Tuple] = None
+
+
+def set_stream_devices(devices) -> None:
+    """Restrict (or with ``None`` reset) the device pool streaming
+    placement draws from.  Order matters: ``stream_mesh`` takes the
+    first ``num_blocks`` devices of the pool and single-host placement
+    uses the pool's first device."""
+    global _STREAM_DEVICES
+    _STREAM_DEVICES = None if devices is None else tuple(devices)
+
+
+def stream_devices() -> Tuple:
+    """The active stream-device pool (all local devices by default)."""
+    if _STREAM_DEVICES is not None:
+        return _STREAM_DEVICES
+    return tuple(jax.devices())
+
+
+def stream_device_count() -> int:
+    """``len(stream_devices())`` — what the planner's R5/R5d backend
+    gate and the sharded engines see as "the device count"."""
+    return len(stream_devices())
+
+
+def stream_devices_key() -> Tuple[int, ...]:
+    """Hashable identity of the active pool, for compile caches: a
+    re-mesh onto different survivors must not reuse a stale mesh."""
+    return tuple(d.id for d in stream_devices())
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -120,21 +159,44 @@ class StreamingSVDState:
         re-shard ``v`` onto the CURRENT device count when it matches the
         column universe (checkpoints are saved gathered, so a state
         saved on 8 devices restores onto 1 — and vice versa — without
-        the file knowing either layout)."""
-        if jax.device_count() == self.num_blocks and jax.device_count() > 1:
+        the file knowing either layout).  Placement follows the ACTIVE
+        device pool (:func:`set_stream_devices`), so a post-failure
+        restore re-shards onto the survivors — or lands gathered on the
+        pool's first device when too few survive for one block each."""
+        if (stream_device_count() == self.num_blocks
+                and stream_device_count() > 1):
             return shard_state(self)
+        if _STREAM_DEVICES is not None:
+            # Restricted pool: make sure nothing stays resident on an
+            # evicted device (the default placement may be the dead one).
+            return gather_state(self)
         return self
 
 
-def stream_mesh(num_blocks: int):
+def stream_mesh(num_blocks: int, devices=None):
     """The one-axis (num_blocks,) mesh the sharded ingest runs on — one
-    column block per device, same convention as core/distributed.py."""
-    if jax.device_count() != num_blocks:
+    column block per device, same convention as core/distributed.py.
+    The mesh takes the first ``num_blocks`` devices of ``devices`` (the
+    active pool by default), so after an eviction the supervisor only
+    has to shrink the pool and every mesh built here lands on
+    survivors."""
+    pool = tuple(devices) if devices is not None else stream_devices()
+    if len(pool) < num_blocks:
         raise ValueError(
             f"sharded streaming needs one device per column block: "
-            f"num_blocks={num_blocks} but device_count="
-            f"{jax.device_count()}")
-    return jax.make_mesh((num_blocks,), (STREAM_AXIS,))
+            f"num_blocks={num_blocks} but only {len(pool)} healthy "
+            f"device(s) in the stream pool")
+    if _STREAM_DEVICES is None and devices is None:
+        # Unrestricted default: keep jax.make_mesh's device ordering so
+        # pre-recovery behavior (and compiled caches) are untouched.
+        if jax.device_count() != num_blocks:
+            raise ValueError(
+                f"sharded streaming needs one device per column block: "
+                f"num_blocks={num_blocks} but device_count="
+                f"{jax.device_count()}")
+        return jax.make_mesh((num_blocks,), (STREAM_AXIS,))
+    return jax.make_mesh((num_blocks,), (STREAM_AXIS,),
+                         devices=pool[:num_blocks])
 
 
 def shard_state(state: StreamingSVDState, mesh=None) -> StreamingSVDState:
@@ -148,11 +210,11 @@ def shard_state(state: StreamingSVDState, mesh=None) -> StreamingSVDState:
                                                        P(STREAM_AXIS, None))))
 
 
-def gather_state(state: StreamingSVDState) -> StreamingSVDState:
-    """Every array on the default device — the layout a single-host
-    ingest (or any host-side consumer) expects.  Inverse of
-    :func:`shard_state`; values are untouched."""
-    dev = jax.devices()[0]
+def gather_state(state: StreamingSVDState, device=None) -> StreamingSVDState:
+    """Every array on one device (the active pool's first by default) —
+    the layout a single-host ingest (or any host-side consumer)
+    expects.  Inverse of :func:`shard_state`; values are untouched."""
+    dev = device if device is not None else stream_devices()[0]
     return jax.tree.map(lambda x: jax.device_put(x, dev), state)
 
 

@@ -78,7 +78,8 @@ from repro.compat import shard_map_nocheck as shard_map
 from repro.core import hierarchy, planner, randomized, ranky, sparse
 from repro.core import svd as lsvd
 from repro.stream import state as stream_state
-from repro.stream.ingest import IngestInfo, _merge_truncate_local
+from repro.stream.ingest import (IngestInfo, _fire_seam,
+                                 _merge_truncate_local)
 from repro.stream.state import STREAM_AXIS, StreamingSVDState
 
 # Smallest row bucket: padding everything below 8 rows to one shape
@@ -405,7 +406,8 @@ def _step_sharded(kind: str, d: int, m_pad: int, width: int,
 
 
 @functools.lru_cache(maxsize=64)
-def _sharded_window_fn(kind: str, d: int, m_pad: int, width: int,
+def _sharded_window_fn(devices_key: Tuple[int, ...], kind: str, d: int,
+                       m_pad: int, width: int,
                        r_b: int, k_state: int, sk_rank: Optional[int],
                        oversample: int, power_iters: int, method: str,
                        use_kernel: bool, decay: float):
@@ -464,6 +466,7 @@ def ingest_window(
     ``lonely_rows_per_block`` is the LAST batch's split, matching what a
     caller polling per-batch diagnostics would have seen last).
     """
+    _fire_seam("ingest.window")
     k = int(config.truncate_rank)
     if state.rank != k:
         raise ValueError(
@@ -497,7 +500,8 @@ def ingest_window(
               config.use_kernel, float(config.history_decay))
 
     if plan.backend == "shard_map":
-        mesh, fn = _sharded_window_fn(*common)
+        mesh, fn = _sharded_window_fn(
+            stream_state.stream_devices_key(), *common)
         rep_sh = NamedSharding(mesh, P())
         v0 = jax.device_put(state.v, NamedSharding(mesh,
                                                    P(STREAM_AXIS, None)))
@@ -525,6 +529,9 @@ def ingest_window(
                         float(config.history_decay))
         call_args = (state.key, state.s, state.v, bidx0, zero, zero, xs)
 
+    # Merge-phase fault seam: brackets the one compiled dispatch (a
+    # raise cannot come from inside the scan's collectives).
+    _fire_seam("ingest.merge")
     if not obs.enabled():
         carry, ys = fn(*call_args)
     else:

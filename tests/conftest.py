@@ -13,6 +13,18 @@ os.environ.setdefault("REPRO_KERNELS", "ref")
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def pytest_configure(config):
+    # The 8-device subprocess suites carry @pytest.mark.timeout caps.
+    # pytest-timeout (requirements-dev.txt) enforces them in CI; when
+    # the plugin is absent locally the marker must still be registered
+    # or strict-marker runs reject the suite.
+    if not config.pluginmanager.hasplugin("timeout"):
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): per-test hard timeout, enforced by "
+            "pytest-timeout when installed (no-op without it)")
+
+
 def run_forced_devices(body: str, devices: int = 8) -> str:
     """Run a snippet in a subprocess with ``devices`` forced host
     devices.  jax pins the device count at first initialization, so

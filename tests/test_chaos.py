@@ -1,0 +1,73 @@
+"""Chaos scenarios on 8 forced host devices: each test runs one
+``scripts/chaos_run.py`` scenario in a subprocess (jax pins the device
+count at first init, so the forced count needs a fresh process) and
+then re-checks the recovery-event artifact from the parent.
+
+The heavy assertions — bit-identical resume, honest R8 degrade, the
+recover.* spans in the obs trace — live in chaos_run.py itself, so CI's
+``chaos`` job and this suite enforce exactly the same contract."""
+import json
+import os
+
+import pytest
+
+from conftest import REPO, run_forced_devices
+
+
+def _run_scenario(scenario: str, out_path: str) -> str:
+    script = os.path.join(REPO, "scripts", "chaos_run.py")
+    return run_forced_devices(f"""
+        import runpy, sys
+        sys.argv = ["chaos_run.py", "--scenario", "{scenario}",
+                    "--out", r"{out_path}"]
+        try:
+            runpy.run_path(r"{script}", run_name="__main__")
+        except SystemExit as e:
+            if e.code not in (0, None):
+                raise
+    """)
+
+
+@pytest.mark.timeout(840)
+def test_chaos_kill_at_batch(tmp_path):
+    out = tmp_path / "events.json"
+    _run_scenario("kill-at-batch", str(out))
+    doc = json.loads(out.read_text())
+    assert doc["scenario"] == "kill-at-batch" and doc["devices"] == 8
+    # Leg A: one kill, mesh rebuilt on the 7 survivors, still sharded.
+    (a,) = doc["legA"]
+    assert a["kind"] == "device_lost" and a["survivors"] == 7
+    assert a["backend_before"] == a["backend_after"] == "shard_map"
+    # Leg B: cascade kills down to 4 survivors force the honest
+    # single-host degrade, and the R8 explanation travels in the event.
+    kinds = [e["kind"] for e in doc["legB"]]
+    assert kinds == ["device_lost"] * 4
+    assert doc["legB"][0]["backend_after"] == "single"
+    assert doc["legB"][-1]["survivors"] == 4
+    assert any("degrading honestly" in r
+               for e in doc["legB"] for r in e["reasons"])
+    assert doc["legB_rel_err"] < 1e-5
+    assert all(e["r8_peak_bytes"] > 0 for e in doc["legA"] + doc["legB"])
+
+
+@pytest.mark.timeout(840)
+def test_chaos_persistent_straggler(tmp_path):
+    out = tmp_path / "events.json"
+    _run_scenario("persistent-straggler", str(out))
+    doc = json.loads(out.read_text())
+    (ev,) = doc["events"]
+    assert ev["kind"] == "straggler_evict"
+    assert ev["device"] == 1 and ev["survivors"] == 7
+    assert doc["backup_saved_s"] > 0
+
+
+@pytest.mark.timeout(840)
+def test_chaos_kill_during_merge(tmp_path):
+    out = tmp_path / "events.json"
+    _run_scenario("kill-during-merge", str(out))
+    doc = json.loads(out.read_text())
+    kinds = [e["kind"] for e in doc["events"]]
+    assert kinds == ["collective_retry", "device_lost"]
+    retry = doc["events"][0]
+    assert retry["retries"] == 1
+    assert retry["resumed_from_batch"] == 2   # last commit before batch 3

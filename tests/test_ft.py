@@ -1,0 +1,363 @@
+"""Fault-tolerance subsystem: straggler monitor edge cases, the
+deterministic fault injector, the stream-shaped elastic plan, planner
+rule R8, the injected-shardings recover path, and the single-device
+StreamSupervisor end-to-end (multi-device chaos lives in
+tests/test_chaos.py behind forced-device subprocesses)."""
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import ft
+from repro.core import api, planner
+from repro.core.planner import ASpec, PlanError
+from repro.ft.straggler import StragglerConfig, StragglerMonitor
+from repro.stream import state as stream_state
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor edge cases (the detection policy must be boring)
+# ---------------------------------------------------------------------------
+
+def test_single_host_never_flagged():
+    # With one host the median IS that host; threshold > 1 can never
+    # trip, no matter how slow the steps get.
+    mon = StragglerMonitor(StragglerConfig(threshold=1.5), num_hosts=1)
+    for t in (1.0, 50.0, 1e6):
+        v = mon.observe({0: t})
+        assert v == {"flagged": [], "evict": []}
+
+
+def test_identical_times_flag_nothing():
+    mon = StragglerMonitor(StragglerConfig(threshold=1.5, patience=1,
+                                           policy="evict"), num_hosts=8)
+    for _ in range(20):
+        v = mon.observe({h: 3.0 for h in range(8)})
+        assert v == {"flagged": [], "evict": []}
+    assert mon.flag_streak == [0] * 8
+
+
+def test_evict_at_exactly_patience_consecutive_flags():
+    cfg = StragglerConfig(alpha=1.0, threshold=1.5, patience=3,
+                          policy="evict")
+    mon = StragglerMonitor(cfg, num_hosts=4)
+    slow = {0: 1.0, 1: 1.0, 2: 1.0, 3: 10.0}
+    assert mon.observe(slow)["evict"] == []          # streak 1
+    assert mon.observe(slow)["evict"] == []          # streak 2
+    assert mon.observe(slow)["evict"] == [3]         # streak 3 == patience
+
+
+def test_flag_streak_resets_when_host_recovers():
+    cfg = StragglerConfig(alpha=1.0, threshold=1.5, patience=3,
+                          policy="evict")
+    mon = StragglerMonitor(cfg, num_hosts=4)
+    slow = {0: 1.0, 1: 1.0, 2: 1.0, 3: 10.0}
+    mon.observe(slow)
+    mon.observe(slow)                                # streak 2
+    mon.observe({h: 1.0 for h in range(4)})          # host 3 recovers
+    assert mon.flag_streak[3] == 0
+    # it takes a FULL patience run of consecutive flags again
+    assert mon.observe(slow)["evict"] == []
+    assert mon.observe(slow)["evict"] == []
+    assert mon.observe(slow)["evict"] == [3]
+
+
+def test_observe_window_adapter():
+    mon = StragglerMonitor(StragglerConfig(alpha=1.0, threshold=1.5),
+                           num_hosts=3)
+    v = mon.observe_window(2.0, [1.0, 1.0, 4.0])
+    assert v["flagged"] == [2]
+    assert mon.ewma == [2.0, 2.0, 8.0]
+    with pytest.raises(ValueError, match="3 hosts"):
+        mon.observe_window(1.0, [1.0, 1.0])
+
+
+def test_observe_window_drift_scales_uniformly():
+    # Drift scales every slot the same way: it weighs the absolute
+    # times, never changes who is flagged (ratios are preserved).
+    a = StragglerMonitor(StragglerConfig(alpha=1.0), num_hosts=2)
+    b = StragglerMonitor(StragglerConfig(alpha=1.0), num_hosts=2)
+    va = a.observe_window(2.0, [1.0, 4.0], drift=1.4)
+    vb = b.observe_window(2.0, [1.0, 4.0], drift=None)
+    assert va["flagged"] == vb["flagged"] == [1]
+    assert a.ewma == [2.0 * 1.4, 8.0 * 1.4]
+    # drift < 1 (measured UNDER plan) never shrinks the times
+    c = StragglerMonitor(StragglerConfig(alpha=1.0), num_hosts=2)
+    c.observe_window(2.0, [1.0, 1.0], drift=0.5)
+    assert c.ewma == [2.0, 2.0]
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: deterministic, fire-once, phase-aware
+# ---------------------------------------------------------------------------
+
+def test_injector_fires_once_in_covered_range():
+    inj = ft.FaultInjector([ft.FailDeviceAt(device=2, at_batch=5)])
+    inj.begin_batches(0, 4)
+    inj.fire("ingest.batch")                 # batch 5 not covered: inert
+    inj.begin_batches(4, 8)
+    with pytest.raises(ft.DeviceLostError) as ei:
+        inj.fire("ingest.batch")
+    assert ei.value.device == 2 and ei.value.batch == 5
+    inj.fire("ingest.batch")                 # fired once; replay is safe
+    assert inj.fired == [ft.FailDeviceAt(device=2, at_batch=5)]
+
+
+def test_injector_phase_routing():
+    entry = ft.FaultInjector([ft.FailDeviceAt(0, 1, phase="entry")])
+    entry.begin_batches(0, 4)
+    entry.fire("ingest.merge")               # entry fault ignores merge
+    with pytest.raises(ft.DeviceLostError):
+        entry.fire("ingest.window")
+    merge = ft.FaultInjector([ft.FailDeviceAt(0, 1, phase="merge")])
+    merge.begin_batches(0, 4)
+    merge.fire("ingest.batch")
+    with pytest.raises(ft.DeviceLostError):
+        merge.fire("ingest.merge")
+    with pytest.raises(ValueError, match="phase"):
+        ft.FaultInjector([ft.FailDeviceAt(0, 1, phase="shuffle")])
+
+
+def test_drop_collective_only_at_merge():
+    inj = ft.FaultInjector([ft.DropCollective(at_batch=0)])
+    inj.begin_batches(0, 2)
+    inj.fire("ingest.batch")
+    with pytest.raises(ft.CollectiveDropError):
+        inj.fire("ingest.merge")
+    inj.fire("ingest.merge")                 # transient: once
+
+
+def test_delay_factor_is_windowed_product():
+    inj = ft.FaultInjector([
+        ft.DelayDevice(device=1, factor=2.0, from_batch=2, until_batch=6),
+        ft.DelayDevice(device=1, factor=3.0, from_batch=4)])
+    assert inj.delay_factor(1, 1) == 1.0
+    assert inj.delay_factor(1, 2) == 2.0
+    assert inj.delay_factor(1, 4) == 6.0     # overlap multiplies
+    assert inj.delay_factor(1, 6) == 3.0     # first window closed
+    assert inj.delay_factor(0, 4) == 1.0     # other devices untouched
+    with pytest.raises(ValueError, match="factor"):
+        ft.FaultInjector([ft.DelayDevice(device=0, factor=1.0)])
+    with pytest.raises(TypeError, match="unknown fault"):
+        ft.FaultInjector(["kill -9"])
+
+
+def test_injector_installed_is_scoped():
+    from repro.ft.inject import stream_ingest
+    inj = ft.FaultInjector([])
+    assert stream_ingest._fault_seam is None
+    with inj.installed():
+        assert stream_ingest._fault_seam == inj.fire
+    assert stream_ingest._fault_seam is None
+
+
+# ---------------------------------------------------------------------------
+# plan_stream_mesh: the 1-D stream sibling of plan_mesh
+# ---------------------------------------------------------------------------
+
+def test_plan_stream_mesh_shapes():
+    p = ft.plan_stream_mesh(8, 4)
+    assert p.shape == (4,) and p.axis_names == (stream_state.STREAM_AXIS,)
+    assert p.dropped_devices == 4
+    assert ft.plan_stream_mesh(4, 4).dropped_devices == 0
+    # too few survivors for one block each: honest single-host grid
+    p1 = ft.plan_stream_mesh(3, 4)
+    assert p1.shape == (1,) and p1.dropped_devices == 2
+    # num_blocks=1 is single-host by construction
+    assert ft.plan_stream_mesh(8, 1).shape == (1,)
+    with pytest.raises(ValueError):
+        ft.plan_stream_mesh(0, 4)
+    with pytest.raises(ValueError):
+        ft.plan_stream_mesh(4, 0)
+
+
+# ---------------------------------------------------------------------------
+# Planner rule R8: the recovery plan prices the post-shrink peak
+# ---------------------------------------------------------------------------
+
+def _spec(num_blocks=4, m=64, n=256):
+    return ASpec(m=m, n=n, nnz=m * n, num_blocks=num_blocks, kind="stream")
+
+
+def test_r8_restore_bytes_closed_form():
+    spec = _spec()
+    k = 8
+    # 4 bytes * (u-ish + v) factors: 2 * N_pad * k
+    n_pad = spec.num_blocks * ((spec.n + spec.num_blocks - 1)
+                               // spec.num_blocks)
+    assert planner.recovery_restore_bytes(spec, k) == 4 * 2 * n_pad * k
+
+
+def test_r8_remesh_keeps_per_device_peak():
+    cfg = api.SolveConfig(truncate_rank=8, stream_backend="shard_map")
+    spec = _spec(num_blocks=4)
+    rp = planner.make_recovery_plan(spec, cfg, survivors=7)
+    base = planner.make_stream_plan(spec, cfg, device_count=4)
+    assert rp.backend == "shard_map"
+    assert rp.peak_bytes == base.peak_bytes
+    assert rp.estimates["recovery_restore"] == \
+        planner.recovery_restore_bytes(spec, 8)
+    assert rp.reasons[0].startswith("R8")
+    assert "7 survivor(s)" in rp.reasons[0]
+
+
+def test_r8_degrade_is_honest():
+    cfg = api.SolveConfig(truncate_rank=8)
+    spec = _spec(num_blocks=8)
+    rp = planner.make_recovery_plan(spec, cfg, survivors=7)
+    base = planner.make_stream_plan(spec, cfg, device_count=1)
+    assert rp.backend == "single"
+    assert rp.peak_bytes == base.peak_bytes     # the FULL R5 working set
+    head = rp.reasons[0]
+    assert "degrading honestly" in head
+    assert f"{base.peak_bytes:,}" in head       # the number is in writing
+    with pytest.raises(PlanError):
+        planner.make_recovery_plan(spec, cfg, survivors=0)
+    with pytest.raises(ValueError):
+        planner.make_recovery_plan(spec, api.SolveConfig(), survivors=4)
+
+
+# ---------------------------------------------------------------------------
+# recover() with injected shardings: no train stack anywhere (satellite:
+# the streaming supervisor must not drag repro.train in)
+# ---------------------------------------------------------------------------
+
+def test_recover_with_shardings_fn_skips_train(tmp_path):
+    from repro.checkpoint.ckpt import Checkpointer
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"w": np.arange(6, dtype=np.float32)}
+    ck.save(3, tree, blocking=True)
+    train_was_absent = "repro.train.step" not in sys.modules
+    seen = {}
+
+    def shardings_fn(ctx):
+        seen["ctx"] = ctx
+        return {"w": None}
+
+    mesh, ctx, state, meta = ft.recover(
+        ck, survivors=list(__import__("jax").devices())[:1],
+        shardings_fn=shardings_fn, model_parallel=1)
+    assert seen["ctx"] is ctx
+    assert np.array_equal(np.asarray(state["w"]), tree["w"])
+    assert meta["step"] == 3
+    if train_was_absent:
+        assert "repro.train.step" not in sys.modules, \
+            "shardings_fn path still imported the train stack"
+    with pytest.raises(ValueError, match="survivor"):
+        ft.recover(ck, survivors=[])
+
+
+# ---------------------------------------------------------------------------
+# SolveConfig recovery knobs
+# ---------------------------------------------------------------------------
+
+def test_solveconfig_recovery_knobs_validate():
+    cfg = api.SolveConfig(truncate_rank=4, checkpoint_every=2,
+                          max_retries=1, retry_backoff_s=0.5)
+    assert cfg.checkpoint_every == 2
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        api.SolveConfig(truncate_rank=4, checkpoint_every=0)
+    with pytest.raises(ValueError, match="max_retries"):
+        api.SolveConfig(truncate_rank=4, max_retries=-1)
+    with pytest.raises(ValueError, match="retry_backoff_s"):
+        api.SolveConfig(truncate_rank=4, retry_backoff_s=-0.1)
+    with pytest.raises(ValueError, match="truncate_rank"):
+        api.SolveConfig(checkpoint_every=2)
+
+
+# ---------------------------------------------------------------------------
+# StreamSupervisor on one device: the transient-fault contract
+# ---------------------------------------------------------------------------
+
+def _stream_cfg(**kw):
+    kw.setdefault("checkpoint_every", 2)
+    kw.setdefault("max_retries", 2)
+    return api.SolveConfig(truncate_rank=4, num_blocks=1, **kw)
+
+
+def _toy_batches(num=7, n=12, m=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+            for _ in range(num)]
+
+
+def _plain_chunked(batches, cfg, every=2):
+    state, i = api.svd_init(12, cfg), 0
+    while i < len(batches):
+        state = api.svd_stream(batches[i:i + every], cfg,
+                               state=state).state
+        i += every
+    return state
+
+
+def test_supervisor_transient_drop_is_bit_identical():
+    cfg = _stream_cfg()
+    batches = _toy_batches()
+    oracle = _plain_chunked(batches, cfg)
+    inj = ft.FaultInjector([ft.DropCollective(at_batch=3)])
+    with tempfile.TemporaryDirectory() as d, inj.installed():
+        with ft.StreamSupervisor(cfg, d, state=api.svd_init(12, cfg),
+                                 injector=inj) as sup:
+            final = sup.run(batches)
+    assert [e.kind for e in sup.events] == ["collective_retry"]
+    assert sup.events[0].retries == 1
+    assert bool(jnp.array_equal(final.u, oracle.u))
+    assert bool(jnp.array_equal(final.s, oracle.s))
+    assert bool(jnp.array_equal(final.v, oracle.v))
+    assert stream_state._STREAM_DEVICES is None      # close() reset it
+
+
+def test_supervisor_retry_exhaustion_escalates():
+    # max_retries=0: the first drop immediately takes the full
+    # drain/replan/restore path; the fault is transient (fires once)
+    # so the replay succeeds and the stream still finishes bitwise.
+    cfg = _stream_cfg(max_retries=0)
+    batches = _toy_batches(num=5, seed=3)
+    oracle = _plain_chunked(batches, cfg)
+    inj = ft.FaultInjector([ft.DropCollective(at_batch=2)])
+    with tempfile.TemporaryDirectory() as d, inj.installed():
+        with ft.StreamSupervisor(cfg, d, state=api.svd_init(12, cfg),
+                                 injector=inj) as sup:
+            final = sup.run(batches)
+    kinds = [e.kind for e in sup.events]
+    assert kinds == ["collective_escalate"], kinds
+    assert sup.events[0].resumed_from_batch == 2
+    assert bool(jnp.array_equal(final.s, oracle.s))
+
+
+def test_supervisor_writes_events_artifact(tmp_path):
+    cfg = _stream_cfg()
+    batches = _toy_batches(num=3, seed=5)
+    inj = ft.FaultInjector([ft.DropCollective(at_batch=1)])
+    with tempfile.TemporaryDirectory() as d, inj.installed():
+        with ft.StreamSupervisor(cfg, d, state=api.svd_init(12, cfg),
+                                 injector=inj) as sup:
+            sup.run(batches)
+    out = tmp_path / "events.json"
+    sup.write_events(str(out), scenario="unit")
+    import json
+    doc = json.loads(out.read_text())
+    assert doc["scenario"] == "unit" and doc["pool"] >= 1
+    (ev,) = doc["events"]
+    assert ev["kind"] == "collective_retry" and ev["batch"] == 1
+    assert isinstance(ev["reasons"], list) and ev["reasons"]
+
+
+def test_supervisor_monitor_resets_after_recovery():
+    cfg = _stream_cfg()
+    with tempfile.TemporaryDirectory() as d:
+        with ft.StreamSupervisor(cfg, d,
+                                 state=api.svd_init(12, cfg)) as sup:
+            sup._monitor.flag_streak[0] = 7          # poisoned history
+            sup._apply_placement(reset_monitor=True)
+            assert sup._monitor.flag_streak == [0]
+            assert sup._monitor.ewma == [None]
+
+
+def test_supervisor_rejects_non_stream_config():
+    with pytest.raises(ValueError, match="truncate_rank"):
+        ft.StreamSupervisor(api.SolveConfig(), "/tmp/x",
+                            state=api.svd_init(12, _stream_cfg()))

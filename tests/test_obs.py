@@ -326,6 +326,7 @@ def test_diagnostics_compile_run_split():
 # 8-device shard_map: per-device drift gauges
 # ---------------------------------------------------------------------------
 
+@pytest.mark.timeout(840)
 def test_shard_map_r5d_drift_is_per_device_subprocess():
     """R5d drift on the 8-device shard_map ingest: memory_analysis
     reports PER-DEVICE peaks and the sharded stream plan prices

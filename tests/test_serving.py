@@ -238,6 +238,7 @@ def test_score_topk_validates_inputs():
         ranker.project_rows(snap, jnp.zeros((2, N + 3)))
 
 
+@pytest.mark.timeout(840)
 def test_sharded_ranker_bitwise_subprocess():
     """8 forced devices: the sharded ranker (per-device fused top-k +
     device-major all-gather merge) is bit-identical to the dense path,

@@ -667,6 +667,7 @@ def test_sharded_history_decay_matches_single_host():
     assert np.abs(s1 - s2).max() <= 1e-5 * s1[0]
 
 
+@pytest.mark.timeout(840)
 def test_sharded_ingest_matches_single_host_subprocess():
     """Subprocess twin of the in-process sharded tests, so a
     single-device tier-1 run still exercises the shard_map engine on 8
@@ -773,6 +774,7 @@ def test_checkpoint_portability_sharded_roundtrip(tmp_path):
                                       np.asarray(getattr(m2, f)))
 
 
+@pytest.mark.timeout(840)
 def test_checkpoint_saved_on_8_devices_restores_on_1(tmp_path):
     """True cross-device-count portability, two processes: an 8-device
     process streams SHARDED and saves; a 1-device process restores the
@@ -861,6 +863,7 @@ def test_r5_measured_peak_within_closed_form(memory_checker):
                    component="temp")
 
 
+@pytest.mark.timeout(840)
 def test_r5d_measured_peak_within_closed_form_subprocess(memory_checker):
     """R5d: the sharded ingest's per-device measured temporaries stay
     within ``streaming_bytes_per_device`` (8 forced host devices)."""
@@ -871,7 +874,7 @@ def test_r5d_measured_peak_within_closed_form_subprocess(memory_checker):
         from repro.core.api import ASpec, SolveConfig
         from repro.core import planner
         si = importlib.import_module("repro.stream.ingest")
-        from repro.stream.state import STREAM_AXIS
+        from repro.stream.state import STREAM_AXIS, stream_devices_key
 
         d, n, m_b, k, p_os = 8, 4096, 32, 16, 8
         spec = ASpec(m=m_b, n=n, nnz=m_b * n, num_blocks=d, kind="stream")
@@ -881,8 +884,8 @@ def test_r5d_measured_peak_within_closed_form_subprocess(memory_checker):
         assert plan.backend == "shard_map"
         r_b = min(m_b, k + p_os) if plan.rank is None else plan.rank
         mesh, fn = si._sharded_ingest_fn(
-            d, "dense", m_b, n // d, r_b, k, plan.rank, p_os,
-            cfg.power_iters, cfg.method, cfg.use_kernel)
+            stream_devices_key(), d, "dense", m_b, n // d, r_b, k,
+            plan.rank, p_os, cfg.power_iters, cfg.method, cfg.use_kernel)
         key = jax.random.PRNGKey(0)
         def sds(shape, dtype, spec_):
             return jax.ShapeDtypeStruct(

@@ -510,6 +510,7 @@ def test_block_ell_records_exact_nnz():
 # The shard_map scan engine (8 forced devices, subprocess)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.timeout(840)
 def test_shard_map_scan_vs_loop_bit_identical_subprocess():
     out = run_forced_devices("""
         import numpy as np
